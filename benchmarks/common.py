@@ -1,0 +1,62 @@
+"""Shared benchmark machinery.
+
+Timing protocol mirrors the paper (§4: 70 runs, average of the last 60):
+scaled down to warmup=3 / timed=10 for the CPU container.  All benchmarks
+emit ``name,us_per_call,derived`` CSV rows.
+
+Absolute GFlop/s are CPU-container numbers; the ``derived`` column carries
+the model-based v5e-roofline quantity for each figure (documented per
+benchmark).  The paper's *relational* claims are asserted on the measured
+columns.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.suite import SUITE, generate
+
+WARMUP = 3
+TIMED = 10
+
+# v5e hardware model (same constants as launch/roofline.py)
+V5E_HBM = 819e9
+V5E_PEAK = 197e12
+
+_suite_cache: dict = {}
+
+
+def suite(scale: float):
+    key = round(scale, 6)
+    if key not in _suite_cache:
+        _suite_cache[key] = {s.name: generate(s, scale) for s in SUITE}
+    return _suite_cache[key]
+
+
+def time_fn(fn, *args) -> float:
+    """Median wall time (seconds) over TIMED runs after WARMUP."""
+    for _ in range(WARMUP):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(TIMED):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def row(name: str, seconds: float, derived) -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"
+
+
+def gflops(flops: float, seconds: float) -> float:
+    return flops / seconds / 1e9
+
+
+def gbs(bytes_: float, seconds: float) -> float:
+    return bytes_ / seconds / 1e9

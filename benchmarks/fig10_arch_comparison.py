@@ -1,0 +1,52 @@
+"""Paper Fig 10: cross-architecture comparison (model-based).
+
+We cannot host a Xeon Phi / K20 / dual-Xeon; instead we reproduce the
+figure's *structure* with a sustained-bandwidth roofline model per
+architecture (sustained BW from the paper's own measurements; v5e from its
+spec and our dry-run memory terms) applied to each matrix's application
+bytes — SpMV is bandwidth-bound on all of them, which is the paper's own
+§4.2 argument.  The container-measured CPU number is reported alongside as
+the only *measured* column.
+
+derived = predicted GFlop/s per architecture + measured CPU GFlop/s.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spmv_csr
+from repro.core.metrics import spmv_app_bytes
+from .common import gflops, row, suite, time_fn
+
+SCALE = 1 / 64
+# sustained SpMV-relevant bandwidth (GB/s): paper's measured Phi; vendor
+# numbers derated to the paper's observed SpMV efficiency for the others.
+SUSTAINED_GBS = {
+    "xeon_phi_SE10P": 180.0,  # paper §2.1
+    "tesla_C2050": 105.0,
+    "tesla_K20": 150.0,
+    "westmere_2xX5680": 40.0,
+    "sandy_2xE5_2670": 70.0,
+    "tpu_v5e_chip": 819.0,
+}
+MATS = ["cant", "webbase-1M", "nd24k", "mesh_2048", "cage14"]
+
+
+def main(lines: list):
+    mats = suite(SCALE)
+    rng = np.random.default_rng(0)
+    for name in MATS:
+        a = mats[name]
+        m, n = a.shape
+        # paper uses f64+i32: 20n + 12tau; we report that accounting
+        app = spmv_app_bytes(m, n, a.nnz, val_bytes=8, idx_bytes=4)
+        flops = 2 * a.nnz
+        preds = ";".join(
+            f"{arch}={flops / (app / (bw * 1e9)) / 1e9:.1f}GF"
+            for arch, bw in SUSTAINED_GBS.items()
+        )
+        x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        dev = a.device()
+        t = time_fn(lambda: spmv_csr(dev, x, n_rows=m))
+        lines.append(row(
+            f"fig10_{name}", t,
+            f"measured_cpu={gflops(flops, t):.2f}GF;{preds}"))

@@ -1,0 +1,50 @@
+"""Paper Fig 1: read-bandwidth micro-benchmarks (array sum variants).
+
+Phi variants -> container analogues:
+  (a) char sum, -O1 (instruction-bound)   -> int8 scalar-ish jnp sum
+  (b) int sum, -O1                        -> int32 jnp sum
+  (c) manual 512-bit vector sum           -> f32 vectorized jnp sum
+  (d) vector sum + prefetch               -> blocked two-pass sum (reduced
+                                             loop overhead; the latency-
+                                             hiding analogue)
+
+derived = fraction of the v5e HBM roofline this access pattern would reach
+if bandwidth-bound at the measured efficiency relative to (d).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import V5E_HBM, gbs, row, time_fn
+
+SIZE_MB = 64
+
+
+def main(lines: list):
+    n = SIZE_MB * 1024 * 1024
+
+    arr8 = jnp.asarray(np.random.default_rng(0).integers(0, 127, n, dtype=np.int8))
+    arr32 = jnp.asarray(np.random.default_rng(1).integers(0, 1 << 30, n // 4, dtype=np.int32))
+    arrf = jnp.asarray(np.random.default_rng(2).standard_normal(n // 4).astype(np.float32))
+
+    sum8 = jax.jit(lambda a: a.astype(jnp.int32).sum())
+    sum32 = jax.jit(lambda a: a.sum())
+    sumf = jax.jit(lambda a: a.sum())
+    sumf_blocked = jax.jit(lambda a: a.reshape(-1, 4096).sum(axis=1).sum())
+
+    results = {}
+    for name, fn, arr in [
+        ("fig1a_char_sum", sum8, arr8),
+        ("fig1b_int_sum", sum32, arr32),
+        ("fig1c_vector_sum", sumf, arrf),
+        ("fig1d_vector_prefetch_sum", sumf_blocked, arrf),
+    ]:
+        t = time_fn(fn, arr)
+        bw = gbs(arr.nbytes, t)
+        results[name] = bw
+        lines.append(row(name, t, f"{bw:.1f}GB/s"))
+    best = max(results.values())
+    for name, bw in results.items():
+        frac = bw / best
+        lines.append(row(name + "_v5e_model", 0.0,
+                         f"{frac * V5E_HBM / 1e9:.0f}GB/s_projected"))

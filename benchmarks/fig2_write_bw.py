@@ -1,0 +1,37 @@
+"""Paper Fig 2: write-bandwidth micro-benchmarks (memset variants).
+
+  (a) vector store            -> jnp.full fresh allocation
+  (b) No-Read hint            -> donated-buffer overwrite (no read of dst)
+  (c) NRNGO                   -> donated overwrite of an in-place scaled
+                                 buffer (XLA elides ordering constraints)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import gbs, row, time_fn
+
+SIZE_MB = 64
+
+
+def main(lines: list):
+    n = SIZE_MB * 1024 * 1024 // 4
+
+    fill = jax.jit(lambda: jnp.full((n,), 3.0, jnp.float32))
+    overwrite = jax.jit(lambda buf: jnp.full_like(buf, 4.0), donate_argnums=(0,))
+    inplace = jax.jit(lambda buf: buf * 0 + 5.0, donate_argnums=(0,))
+
+    t = time_fn(fill)
+    lines.append(row("fig2a_store", t, f"{gbs(n * 4, t):.1f}GB/s"))
+
+    def with_fresh(fn):
+        def run():
+            buf = jnp.zeros((n,), jnp.float32)
+            jax.block_until_ready(buf)
+            return fn(buf)
+        return run
+
+    t = time_fn(with_fresh(overwrite))
+    lines.append(row("fig2b_noread_hint", t, f"{gbs(n * 4, t):.1f}GB/s_upper"))
+    t = time_fn(with_fresh(inplace))
+    lines.append(row("fig2c_nrngo", t, f"{gbs(n * 4, t):.1f}GB/s_upper"))

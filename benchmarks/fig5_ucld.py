@@ -1,0 +1,34 @@
+"""Paper Fig 5: vectorized-SpMV performance correlates with UCLD.
+
+Reports UCLD + UTD per matrix and the Pearson correlation between UCLD and
+the vector-tier GFlop/s from fig4 (the paper's qualitative claim: higher
+cacheline density -> bigger vectorization win).
+"""
+import numpy as np
+
+from repro.core import ucld, utd
+from .common import row, suite
+from .fig4_spmv import SCALE, speedups, vector_gflops
+
+
+def main(lines: list):
+    mats = suite(SCALE)
+    perf = vector_gflops()
+    us, gs = [], []
+    for name, a in mats.items():
+        u = ucld(a, line_width=8)
+        t = utd(a, (8, 128))
+        lines.append(row(f"fig5_ucld_{name}", 0.0, f"ucld={u:.3f};utd={t:.4f}"))
+        if name in perf:
+            us.append(u)
+            gs.append(perf[name])
+    if len(us) >= 3:
+        r = float(np.corrcoef(us, gs)[0, 1])
+        lines.append(row("fig5_pearson_ucld_vs_gflops", 0.0, f"{r:+.3f}"))
+    # The paper's actual Fig 5 claim: the *vectorization win* (here the
+    # scalar->vector speedup) grows with UCLD.
+    sp = speedups()
+    us2 = [ucld(mats[n]) for n in sp]
+    if len(sp) >= 3:
+        r2 = float(np.corrcoef(us2, list(sp.values()))[0, 1])
+        lines.append(row("fig5_pearson_ucld_vs_vector_win", 0.0, f"{r2:+.3f}"))

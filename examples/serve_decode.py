@@ -1,0 +1,45 @@
+"""Batched decode serving with continuous slot assignment.
+
+The paper's framing: decode is SpMV (k=1, memory-bound), batching requests
+is the SpMM move (Fig 9).  This example measures tokens/s at batch 1 vs 8
+to show the amortization on a small LM.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import ModelConfig, init_model
+from repro.runtime.server import BatchedServer, Request
+
+
+def run(batch_slots: int, n_requests: int, cfg, params):
+    srv = BatchedServer(cfg, params, batch_slots=batch_slots, max_seq=128)
+    rng = np.random.default_rng(0)
+    for i in range(n_requests):
+        srv.submit(Request(rid=i, prompt=rng.integers(0, cfg.vocab, 4).astype(np.int32),
+                           max_new=16))
+    t0 = time.perf_counter()
+    srv.run_until_drained()
+    dt = time.perf_counter() - t0
+    toks = n_requests * 16
+    return toks / dt, srv.steps
+
+
+def main():
+    cfg = ModelConfig(arch_id="serve-demo", family="dense", n_layers=4,
+                      d_model=256, n_heads=4, n_kv_heads=2, d_ff=512,
+                      vocab=2048, dtype=jnp.float32, remat="none",
+                      attn_chunk=64)
+    params, _ = init_model(cfg, 0)
+    for slots in (1, 4, 8):
+        tps, steps = run(slots, 8, cfg, params)
+        print(f"batch={slots}: {tps:7.1f} tok/s  ({steps} decode steps)")
+    print("\nbatching amortizes weight reads over requests — the serving "
+          "version of the paper's SpMV->SpMM k-amortization (Fig 9).")
+
+
+if __name__ == "__main__":
+    main()

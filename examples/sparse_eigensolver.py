@@ -1,0 +1,50 @@
+"""The paper's motivating application (§5 cites LOBPCG eigensolvers): a
+block power iteration computing the top-k eigenpairs of a suite matrix with
+SpMM as the inner kernel — exactly why SpMM throughput matters.
+
+Uses the symmetrized `2cubes_sphere` stand-in and k=8 simultaneous vectors;
+validates the dominant eigenvalue against numpy on the densified matrix.
+
+Run:  PYTHONPATH=src python examples/sparse_eigensolver.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import csr_from_coo, csr_to_dense, spmm_csr
+from repro.data.suite import generate
+
+
+def symmetrize(a):
+    rows = np.repeat(np.arange(a.shape[0]), np.diff(a.indptr))
+    r = np.concatenate([rows, a.indices])
+    c = np.concatenate([a.indices, rows])
+    v = np.concatenate([a.data, a.data]) * 0.5
+    return csr_from_coo(a.shape, r, c, v)
+
+
+def main():
+    a = symmetrize(generate("2cubes_sphere", scale=1 / 128))
+    n = a.shape[0]
+    k = 8
+    dev = a.device()
+    rng = np.random.default_rng(0)
+    V = jnp.asarray(rng.standard_normal((n, k)).astype(np.float32))
+
+    for it in range(60):
+        W = spmm_csr(dev, V, n_rows=n)  # the paper's SpMM kernel
+        V, R = jnp.linalg.qr(W)  # block orthogonalization
+        if it % 20 == 19:
+            print(f"iter {it+1}: top Ritz value {float(R[0, 0]):.6f}")
+
+    ritz = np.abs(np.asarray(jnp.diag(R)))
+    dense = csr_to_dense(a)
+    true = np.sort(np.abs(np.linalg.eigvalsh(dense)))[::-1][:k]
+    print("block-power |eig|:", np.round(np.sort(ritz)[::-1][:3], 4))
+    print("numpy       |eig|:", np.round(true[:3], 4))
+    err = abs(np.sort(ritz)[::-1][0] - true[0]) / true[0]
+    print(f"dominant eigenvalue rel-err: {err:.2%}")
+    assert err < 0.05
+
+
+if __name__ == "__main__":
+    main()

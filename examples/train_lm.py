@@ -1,0 +1,57 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+Uses the framework's full stack — config, data pipeline, AdamW + cosine,
+microbatch grad accumulation, async checkpointing, fault-tolerant driver —
+on a CPU-sized model by default (~14M params; pass --big for the ~100M
+config if you have the minutes).  The FFN can be the paper-integrated
+block-sparse layer (--sparse).
+
+Run:  PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import tempfile
+
+import jax.numpy as jnp
+
+from repro.data.pipeline import MarkovTokens
+from repro.models.ffn import SparseFFNConfig
+from repro.models.lm import ModelConfig
+from repro.optim.adamw import OptimConfig
+from repro.runtime.trainer import TrainConfig, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--big", action="store_true", help="~100M params")
+    ap.add_argument("--sparse", action="store_true", help="block-sparse FFN")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    if args.big:  # ~100M
+        dims = dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                    d_ff=2048, vocab=8192)
+    else:  # ~14M — minutes on the CPU container
+        dims = dict(n_layers=6, d_model=384, n_heads=6, n_kv_heads=2,
+                    d_ff=1024, vocab=4096)
+    cfg = ModelConfig(
+        arch_id="example-lm", family="dense", dtype=jnp.float32,
+        remat="none", attn_chunk=128,
+        sparse_ffn=SparseFFNConfig(kind="structured", n_groups=8, band=1)
+        if args.sparse else None,
+        **dims,
+    )
+    data = MarkovTokens(vocab=dims["vocab"], batch=8, seq=256, branch=8, seed=0)
+    opt = OptimConfig(lr_peak=6e-4, warmup_steps=20, total_steps=args.steps)
+    ckpt = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_lm_")
+    tc = TrainConfig(steps=args.steps, microbatches=2, ckpt_every=50,
+                     ckpt_dir=ckpt, log_every=10)
+    params, _, hist = train_loop(cfg, opt, tc, data)
+    print(f"\nfinal loss {hist[-1]['loss']:.4f} "
+          f"(chain entropy floor {data.entropy_floor():.4f}, "
+          f"log-vocab {float(jnp.log(dims['vocab'])):.4f})")
+    print(f"checkpoints in {ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .manager import CheckpointManager, tree_paths  # noqa: F401

@@ -1,0 +1,110 @@
+"""Architecture registry + the assigned input-shape grid.
+
+Every (architecture x shape) cell of the assignment is made concrete here:
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+input of the step that cell lowers (train_4k -> train_step, prefill_32k ->
+prefill_step, decode_32k / long_500k -> decode_step), with no device
+allocation — the dry-run pattern.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import ModelConfig, init_decode_state
+
+_MODULES = {
+    "h2o-danube-3-4b": "h2o_danube_3_4b",
+    "deepseek-67b": "deepseek_67b",
+    "llama3-405b": "llama3_405b",
+    "qwen1.5-4b": "qwen1_5_4b",
+    "rwkv6-7b": "rwkv6_7b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "whisper-tiny": "whisper_tiny",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+}
+ARCH_IDS = list(_MODULES)
+
+
+def _mod(arch_id: str):
+    return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _mod(arch_id).CONFIG
+
+
+def get_reduced(arch_id: str) -> ModelConfig:
+    return _mod(arch_id).REDUCED
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+SHAPE_NAMES = list(SHAPES)
+
+
+def is_subquadratic(cfg: ModelConfig) -> bool:
+    return cfg.family in ("ssm", "hybrid") or cfg.sliding_window is not None
+
+
+def cell_supported(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """long_500k only runs on sub-quadratic archs (DESIGN.md §5)."""
+    if shape_name == "long_500k" and not is_subquadratic(cfg):
+        return False, "pure full attention — long_500k skipped per spec"
+    return True, ""
+
+
+def _batch_extras(cfg: ModelConfig, batch: int, seq: int):
+    extras = {}
+    if cfg.family == "audio":
+        extras["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.enc_frames, cfg.d_model), jnp.float32
+        )
+    if cfg.family == "vlm" and cfg.n_vision_tokens:
+        extras["vision_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_vision_tokens, cfg.d_model), jnp.float32
+        )
+        extras["positions"] = jax.ShapeDtypeStruct((3, batch, seq), jnp.int32)
+    return extras
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for the cell's step inputs."""
+    sh = SHAPES[shape_name]
+    if sh.kind == "train":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((sh.batch, sh.seq), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((sh.batch, sh.seq), jnp.int32),
+        }
+        batch.update(_batch_extras(cfg, sh.batch, sh.seq))
+        return {"batch": batch}
+    if sh.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((sh.batch, sh.seq), jnp.int32)}
+        batch.update(_batch_extras(cfg, sh.batch, sh.seq))
+        return {"batch": batch}
+    if sh.kind == "decode":
+        state = jax.eval_shape(
+            lambda: init_decode_state(cfg, sh.batch, sh.seq)
+        )
+        return {
+            "state": state,
+            "tokens": jax.ShapeDtypeStruct((sh.batch, 1), jnp.int32),
+        }
+    raise ValueError(sh.kind)

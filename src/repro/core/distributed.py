@@ -1,0 +1,112 @@
+"""Distributed SpMV/SpMM: the paper's 61-private-caches problem at mesh scale.
+
+The paper found that the same x entries are re-fetched into many private L2s
+(actual traffic up to 1.7x application traffic).  Across chips the same
+phenomenon is the collective traffic needed to make x visible to every shard.
+Two schedules are provided, both as shard_map programs over a 1-D mesh axis:
+
+* ``allgather_spmm`` — gather all of x to every shard, then local SpMM.
+  Simple; collective bytes = (P-1)/P * |x| per shard, all up-front.
+
+* ``ring_spmm`` — A is partitioned (rows x col-slabs); each shard starts with
+  its local x-slab and rotates slabs around the ring with
+  ``lax.ppermute`` while multiplying the matching column-slab of A.
+  Compute and communication overlap step-by-step (the distributed-memory
+  answer to the paper's "input vector distribution" future-work note, and the
+  same schedule as weight-stationary ring matmuls in TPU LM serving).
+
+Both operate on *stacked* shard arrays built by core.partition, so they jit
+under shard_map with static shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .spmv import _rows_from_indptr
+
+__all__ = ["allgather_spmm", "ring_spmm", "local_spmm"]
+
+
+def local_spmm(shard: dict[str, Any], x: jax.Array, n_rows: int) -> jax.Array:
+    """Local CSR SpMM on one shard's (padded) arrays. X: (n_local, k)."""
+    rows = _rows_from_indptr(shard["indptr"], shard["indices"].shape[0], n_rows)
+    prod = shard["data"][:, None] * x[shard["indices"], :]
+    return jax.ops.segment_sum(prod, rows, num_segments=n_rows)
+
+
+def allgather_spmm(mesh, axis: str, stacked: dict[str, Any], x_sharded: jax.Array):
+    """Y = A @ X with A row-partitioned and X all-gathered per shard.
+
+    stacked: per-shard padded CSR arrays with a leading shard dim (see
+    core.partition.stack_csr_shards), already placed with that dim over
+    ``axis``.  x_sharded: (P * n_local, k) row-sharded over ``axis``.
+    """
+    n_rows = stacked["indptr"].shape[-1] - 1
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis)),
+        out_specs=P(axis),
+    )
+    def run(shard, x_local):
+        shard = jax.tree.map(lambda a: a[0], shard)  # drop unit shard dim
+        x_full = jax.lax.all_gather(x_local, axis, tiled=True)
+        return local_spmm(shard, x_full, n_rows)[None]
+
+    return run(stacked, x_sharded)
+
+
+def ring_spmm(mesh, axis: str, stacked_grid: dict[str, Any], x_sharded: jax.Array):
+    """Ring-rotated SpMM: A (rows x col-slab) shards, x-slabs ppermute rotation.
+
+    stacked_grid: padded CSR arrays with leading dims (P_row_shard, P_col_slab)
+    where the row-shard dim is over ``axis`` and the col-slab dim is local;
+    shard p holds its row-slab of A split into P column slabs with slab-local
+    column indices.  Step s multiplies slab ((p + s) mod P) against the
+    x-slab currently held, then rotates x to the next shard.  P-1 rotations;
+    each overlaps with one local SpMM.
+    """
+    n_rows = stacked_grid["indptr"].shape[-1] - 1
+    n_steps = jax.device_count() if mesh is None else mesh.shape[axis]
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis)),
+        out_specs=P(axis),
+    )
+    def run(grid_shard, x_local):
+        grid_shard = jax.tree.map(lambda a: a[0], grid_shard)  # (P_col, ...)
+        x_local = x_local  # (n_local, k)
+        p = jax.lax.axis_index(axis)
+
+        def step(carry, s):
+            x_slab, acc = carry
+            slab_id = (p + s) % n_steps
+            sub = jax.tree.map(lambda a: a[slab_id], grid_shard)
+            acc = acc + local_spmm(sub, x_slab, n_rows)
+            # Rotate x backwards around the ring so shard p sees slab p+s+1.
+            nxt = jax.lax.ppermute(
+                x_slab,
+                axis,
+                perm=[(i, (i - 1) % n_steps) for i in range(n_steps)],
+            )
+            return (nxt, acc), None
+
+        acc0 = jnp.zeros((n_rows, x_local.shape[-1]), x_local.dtype)
+        # The accumulator must be marked device-varying for the scan carry.
+        acc0 = jax.lax.pcast(acc0, (axis,), to="varying")
+        init = (x_local, acc0)
+        (x_final, acc), _ = jax.lax.scan(
+            step, init, jnp.arange(n_steps, dtype=jnp.int32)
+        )
+        del x_final
+        return acc[None]
+
+    return run(stacked_grid, x_sharded)

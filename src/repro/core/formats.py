@@ -1,0 +1,357 @@
+"""Sparse matrix storage formats, adapted from the paper to TPU-native tiles.
+
+The paper (Saule, Kaya, Catalyurek, 2013) uses CRS (a.k.a. CSR) as the baseline
+format, 8x{1..8} register-blocked dense blocks (BCSR-like) for its register
+blocking study (Table 2), and OpenMP ``dynamic,64`` scheduling for load
+balance.  The TPU adaptation keeps CSR as the reference/oracle format and maps:
+
+* register blocking  -> BCSR with MXU/VPU aligned tiles ((8,128), (128,128));
+* ``vgatherd`` packing -> SELL-C-sigma: rows sorted by length inside windows of
+  ``sigma`` rows, packed into chunks of ``C`` rows (C = 8 sublanes) so the
+  per-slot gather offsets are dense and VMEM-local;
+* ``dynamic,64`` scheduling -> the SELL sorting window doubles as the
+  load-balancing unit.
+
+All construction happens in numpy on the host; ``.device()`` returns a pytree
+of ``jnp`` arrays with static shapes suitable for jit/pallas.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+try:  # jax is always present in this repo, but keep numpy-only paths usable.
+    import jax.numpy as jnp
+except Exception:  # pragma: no cover
+    jnp = None
+
+Array = np.ndarray
+
+__all__ = [
+    "CSRMatrix",
+    "BCSRMatrix",
+    "SELLMatrix",
+    "csr_from_dense",
+    "csr_from_coo",
+    "bcsr_from_csr",
+    "sell_from_csr",
+    "csr_to_dense",
+    "bcsr_to_dense",
+    "sell_to_dense",
+]
+
+
+# ---------------------------------------------------------------------------
+# CSR (the paper's CRS) — reference format
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class CSRMatrix:
+    """Compressed sparse row; mirrors the paper's CRS arrays.
+
+    ``indptr``  == paper's ``rptrs`` (m+1, int32)
+    ``indices`` == paper's ``cids``  (nnz, int32)
+    ``data``    == paper's ``val``   (nnz, dtype)
+    """
+
+    shape: Tuple[int, int]
+    indptr: Array
+    indices: Array
+    data: Array
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def nnz_per_row(self) -> Array:
+        return np.diff(self.indptr)
+
+    def device(self):
+        return {
+            "indptr": jnp.asarray(self.indptr),
+            "indices": jnp.asarray(self.indices),
+            "data": jnp.asarray(self.data),
+        }
+
+    def validate(self) -> None:
+        m, n = self.shape
+        assert self.indptr.shape == (m + 1,)
+        assert self.indptr[0] == 0 and self.indptr[-1] == self.nnz
+        assert np.all(np.diff(self.indptr) >= 0), "indptr must be monotone"
+        if self.nnz:
+            assert self.indices.min() >= 0 and self.indices.max() < n
+        assert self.data.shape == (self.nnz,)
+
+    def permuted(self, row_perm: Array, col_perm: Array | None = None) -> "CSRMatrix":
+        """Return PAQ^T style permuted matrix (row_perm maps new->old)."""
+        m, n = self.shape
+        col_perm = row_perm if col_perm is None else col_perm
+        inv_col = np.empty(n, dtype=np.int64)
+        inv_col[col_perm] = np.arange(n)
+        counts = np.diff(self.indptr)[row_perm]
+        new_indptr = np.zeros(m + 1, dtype=self.indptr.dtype)
+        np.cumsum(counts, out=new_indptr[1:])
+        new_indices = np.empty(self.nnz, dtype=self.indices.dtype)
+        new_data = np.empty(self.nnz, dtype=self.data.dtype)
+        for new_r, old_r in enumerate(row_perm):
+            s, e = self.indptr[old_r], self.indptr[old_r + 1]
+            ns = new_indptr[new_r]
+            cols = inv_col[self.indices[s:e]]
+            order = np.argsort(cols, kind="stable")
+            new_indices[ns : ns + e - s] = cols[order]
+            new_data[ns : ns + e - s] = self.data[s:e][order]
+        return CSRMatrix((m, n), new_indptr, new_indices, new_data)
+
+
+def csr_from_dense(dense: Array, dtype=np.float32, index_dtype=np.int32) -> CSRMatrix:
+    dense = np.asarray(dense)
+    m, n = dense.shape
+    rows, cols = np.nonzero(dense)
+    order = np.lexsort((cols, rows))
+    rows, cols = rows[order], cols[order]
+    indptr = np.zeros(m + 1, dtype=index_dtype)
+    np.add.at(indptr, rows + 1, 1)
+    indptr = np.cumsum(indptr).astype(index_dtype)
+    return CSRMatrix(
+        (m, n), indptr, cols.astype(index_dtype), dense[rows, cols].astype(dtype)
+    )
+
+
+def csr_from_coo(
+    shape: Tuple[int, int],
+    rows: Array,
+    cols: Array,
+    vals: Array | None = None,
+    dtype=np.float32,
+    index_dtype=np.int32,
+    sum_duplicates: bool = True,
+) -> CSRMatrix:
+    m, n = shape
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    if vals is None:
+        vals = np.ones(rows.shape[0], dtype=dtype)
+    vals = np.asarray(vals, dtype=dtype)
+    order = np.lexsort((cols, rows))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    if sum_duplicates and rows.size:
+        key = rows * n + cols
+        uniq, inv = np.unique(key, return_inverse=True)
+        summed = np.zeros(uniq.shape[0], dtype=np.float64)
+        np.add.at(summed, inv, vals.astype(np.float64))
+        rows, cols = uniq // n, uniq % n
+        vals = summed.astype(dtype)
+    indptr = np.zeros(m + 1, dtype=np.int64)
+    np.add.at(indptr, rows + 1, 1)
+    indptr = np.cumsum(indptr)
+    return CSRMatrix(
+        (m, n),
+        indptr.astype(index_dtype),
+        cols.astype(index_dtype),
+        vals.astype(dtype),
+    )
+
+
+def csr_to_dense(a: CSRMatrix) -> Array:
+    m, n = a.shape
+    out = np.zeros((m, n), dtype=a.data.dtype)
+    for r in range(m):
+        s, e = a.indptr[r], a.indptr[r + 1]
+        out[r, a.indices[s:e]] = a.data[s:e]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# BCSR — the paper's register blocking (Table 2), MXU-tile adapted
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class BCSRMatrix:
+    """Block CSR with dense (bm, bk) blocks.
+
+    The paper stores a x b dense blocks with one dimension equal to the SIMD
+    width (8 doubles).  On TPU the natural tiles are (8, 128) (one VPU tile)
+    and (128, 128) (one MXU pass).  Fill-in zeros are stored explicitly, just
+    like the paper — the fill *ratio* economics (Table 2's >=70% break-even)
+    are computed by core.metrics.
+
+    Blocks are stored sorted by (block_row, block_col).  ``block_rows`` is the
+    per-stored-block row index (the "expanded indptr") because the Pallas
+    kernel iterates stored blocks linearly with scalar prefetch.
+    """
+
+    shape: Tuple[int, int]  # logical (unpadded) shape
+    block_shape: Tuple[int, int]
+    indptr: Array  # (n_block_rows + 1,)
+    block_cols: Array  # (n_blocks,)
+    block_rows: Array  # (n_blocks,) — row id per stored block
+    blocks: Array  # (n_blocks, bm, bk) dense, fill-in zeros included
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.block_cols.shape[0])
+
+    @property
+    def padded_shape(self) -> Tuple[int, int]:
+        bm, bk = self.block_shape
+        m, n = self.shape
+        return (-(-m // bm) * bm, -(-n // bk) * bk)
+
+    @property
+    def grid_shape(self) -> Tuple[int, int]:
+        pm, pn = self.padded_shape
+        return (pm // self.block_shape[0], pn // self.block_shape[1])
+
+    @property
+    def stored_bytes(self) -> int:
+        return int(
+            self.blocks.nbytes + self.block_cols.nbytes + self.indptr.nbytes
+        )
+
+    def device(self):
+        return {
+            "indptr": jnp.asarray(self.indptr),
+            "block_cols": jnp.asarray(self.block_cols),
+            "block_rows": jnp.asarray(self.block_rows),
+            "blocks": jnp.asarray(self.blocks),
+        }
+
+    def fill_ratio(self) -> float:
+        """nnz / stored values — the paper's block-density metric."""
+        nnz = int(np.count_nonzero(self.blocks))
+        stored = int(self.blocks.size)
+        return nnz / max(stored, 1)
+
+
+def bcsr_from_csr(a: CSRMatrix, block_shape: Tuple[int, int]) -> BCSRMatrix:
+    bm, bk = block_shape
+    m, n = a.shape
+    gm, gn = -(-m // bm), -(-n // bk)
+    # Identify occupied blocks (vectorized scatter — no python-per-nnz loop).
+    rows = np.repeat(np.arange(m), np.diff(a.indptr))
+    brows = (rows // bm).astype(np.int64)
+    bcols = (a.indices // bk).astype(np.int64)
+    key = brows * gn + bcols
+    uniq, inv = np.unique(key, return_inverse=True)
+    block_rows = (uniq // gn).astype(np.int32)
+    block_cols = (uniq % gn).astype(np.int32)
+    blocks = np.zeros((uniq.shape[0], bm, bk), dtype=a.data.dtype)
+    flat = inv * (bm * bk) + (rows % bm) * bk + (a.indices % bk)
+    blocks.reshape(-1)[flat] = a.data
+    indptr = np.zeros(gm + 1, dtype=np.int32)
+    np.add.at(indptr, block_rows + 1, 1)
+    indptr = np.cumsum(indptr).astype(np.int32)
+    return BCSRMatrix((m, n), (bm, bk), indptr, block_cols, block_rows, blocks)
+
+
+def bcsr_to_dense(a: BCSRMatrix) -> Array:
+    pm, pn = a.padded_shape
+    bm, bk = a.block_shape
+    out = np.zeros((pm, pn), dtype=a.blocks.dtype)
+    for t in range(a.n_blocks):
+        r, c = int(a.block_rows[t]), int(a.block_cols[t])
+        out[r * bm : (r + 1) * bm, c * bk : (c + 1) * bk] = a.blocks[t]
+    return out[: a.shape[0], : a.shape[1]]
+
+
+# ---------------------------------------------------------------------------
+# SELL-C-sigma — the vgatherd-friendly packing
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SELLMatrix:
+    """Sliced ELLPACK with sorting window sigma and chunk height C.
+
+    Rows are sorted by descending nnz within windows of ``sigma`` rows, then
+    packed into chunks of ``C`` consecutive (sorted) rows.  Every chunk is
+    padded to its own max row length, and all chunks are then padded to the
+    global max chunk width so the device arrays are rectangular:
+
+      cols  (n_chunks, C, W) int32   gather offsets into x (padding -> 0)
+      vals  (n_chunks, C, W) dtype   values (padding -> 0.0)
+      row_perm (n_chunks * C,)       sorted-row -> original-row map
+      chunk_width (n_chunks,)        true width per chunk (for traffic models)
+
+    C = 8 matches both the paper's SIMD height (8 f64 lanes) and the TPU
+    sublane count; W is rounded up to a multiple of ``width_align`` so the
+    lane dimension stays 128-aligned on TPU.
+    """
+
+    shape: Tuple[int, int]
+    C: int
+    sigma: int
+    cols: Array
+    vals: Array
+    row_perm: Array
+    chunk_width: Array
+
+    @property
+    def n_chunks(self) -> int:
+        return int(self.cols.shape[0])
+
+    @property
+    def padded_rows(self) -> int:
+        return self.n_chunks * self.C
+
+    @property
+    def stored_bytes(self) -> int:
+        return int(self.cols.nbytes + self.vals.nbytes)
+
+    def device(self):
+        return {
+            "cols": jnp.asarray(self.cols),
+            "vals": jnp.asarray(self.vals),
+            "row_perm": jnp.asarray(self.row_perm),
+        }
+
+
+def sell_from_csr(
+    a: CSRMatrix, C: int = 8, sigma: int = 64, width_align: int = 1
+) -> SELLMatrix:
+    m, n = a.shape
+    lengths = np.diff(a.indptr)
+    # Sort rows by descending length within windows of sigma rows.
+    perm = np.arange(m)
+    for s in range(0, m, sigma):
+        e = min(s + sigma, m)
+        window = perm[s:e]
+        order = np.argsort(-lengths[window], kind="stable")
+        perm[s:e] = window[order]
+    n_chunks = -(-m // C)
+    padded_rows = n_chunks * C
+    sorted_len = np.zeros(padded_rows, dtype=np.int64)
+    sorted_len[:m] = lengths[perm]
+    chunk_width = sorted_len.reshape(n_chunks, C).max(axis=1)
+    W = int(max(chunk_width.max(initial=1), 1))
+    if width_align > 1:
+        W = -(-W // width_align) * width_align
+    cols = np.zeros((n_chunks, C, W), dtype=np.int32)
+    vals = np.zeros((n_chunks, C, W), dtype=a.data.dtype)
+    # Vectorized packing: nnz t of original row r lands at sorted row
+    # inv_perm[r], slot (t - indptr[r]).
+    inv_perm = np.empty(m, dtype=np.int64)
+    inv_perm[perm] = np.arange(m)
+    rows_of_nnz = np.repeat(np.arange(m), lengths)
+    sorted_row = inv_perm[rows_of_nnz]
+    slot = np.arange(a.nnz) - np.repeat(a.indptr[:-1], lengths)
+    cols[sorted_row // C, sorted_row % C, slot] = a.indices
+    vals[sorted_row // C, sorted_row % C, slot] = a.data
+    row_perm = np.full(padded_rows, -1, dtype=np.int32)
+    row_perm[:m] = perm
+    return SELLMatrix(
+        (m, n), C, sigma, cols, vals, row_perm, chunk_width.astype(np.int32)
+    )
+
+
+def sell_to_dense(a: SELLMatrix) -> Array:
+    m, n = a.shape
+    out = np.zeros((m, n), dtype=a.vals.dtype)
+    for i in range(a.padded_rows):
+        orig = int(a.row_perm[i])
+        if orig < 0:
+            continue
+        chunk, lane = i // a.C, i % a.C
+        # Padding entries have val == 0; adding them to column 0 is harmless
+        # only if no real nonzero shares the slot, so accumulate instead.
+        np.add.at(out[orig], a.cols[chunk, lane], a.vals[chunk, lane])
+    return out

@@ -1,0 +1,136 @@
+"""Performance metrics from the paper, plus their TPU-tile generalizations.
+
+UCLD (useful cacheline density, paper §4.1/Fig 5): per row, the ratio of the
+row's nnz to the number of x-vector *elements* covered by the cachelines that
+row touches; averaged over rows.  A cacheline holds ``line_width`` elements
+(8 for the paper's f64/64B lines).  Range [1/line_width, 1].
+
+UTD (useful tile density) is our TPU generalization: the denominator is the
+(tile_rows, tile_cols) VMEM/MXU tile instead of the cacheline, evaluated over
+the 2-D pattern (the register-blocking economics of Table 2 fall out of the
+same quantity with tile == block).
+
+Bandwidth models (paper §4.2, Fig 6):
+  naive_bytes  = tau * (val_bytes + idx_bytes)
+  app_bytes    = 2*n*val_bytes + (n+1)*idx_bytes + tau*(val_bytes+idx_bytes)
+  spmm variants scale the vector terms by k.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .formats import BCSRMatrix, CSRMatrix
+
+__all__ = [
+    "ucld",
+    "ucld_per_row",
+    "utd",
+    "block_fill_histogram",
+    "spmv_naive_bytes",
+    "spmv_app_bytes",
+    "spmm_app_bytes",
+    "flop_to_byte_spmv",
+    "flop_to_byte_spmm",
+    "matrix_bandwidth",
+]
+
+
+def ucld_per_row(a: CSRMatrix, line_width: int = 8) -> np.ndarray:
+    """Paper's UCLD for each row: nnz_row / (lines_touched * line_width)."""
+    m, n = a.shape
+    lengths = np.diff(a.indptr)
+    rows = np.repeat(np.arange(m, dtype=np.int64), lengths)
+    n_lines_per_col = -(-n // line_width)
+    key = rows * n_lines_per_col + a.indices // line_width
+    uniq_rows = np.unique(key) // n_lines_per_col  # one entry per (row, line)
+    lines_touched = np.bincount(uniq_rows.astype(np.int64), minlength=m)
+    out = np.ones(m, dtype=np.float64)  # empty rows count as perfectly dense
+    nz = lengths > 0
+    out[nz] = lengths[nz] / (lines_touched[nz] * line_width)
+    return out
+
+
+def ucld(a: CSRMatrix, line_width: int = 8) -> float:
+    """Average UCLD (paper Fig 5 x-axis). Worst 1/line_width, best 1.0."""
+    return float(ucld_per_row(a, line_width).mean())
+
+
+def utd(a: CSRMatrix, tile: tuple[int, int] = (8, 128)) -> float:
+    """Useful tile density: nnz / (touched_tiles * tile_elems).
+
+    The TPU analogue of UCLD: with tile == (1, line_width) it reduces to a
+    row-weighted UCLD variant.  Predicts the win of tile-gather kernels the
+    same way UCLD predicts the vgatherd win (Fig 5).
+    """
+    tr, tc = tile
+    rows = np.repeat(np.arange(a.shape[0]), np.diff(a.indptr))
+    tiles = (rows // tr).astype(np.int64) * (
+        -(-a.shape[1] // tc)
+    ) + a.indices // tc
+    n_tiles = np.unique(tiles).shape[0]
+    if n_tiles == 0:
+        return 1.0
+    return a.nnz / (n_tiles * tr * tc)
+
+
+def block_fill_histogram(a: BCSRMatrix, bins: int = 10) -> np.ndarray:
+    """Histogram of per-block density — drives the paper's Table 2 analysis."""
+    dens = (a.blocks != 0).reshape(a.n_blocks, -1).mean(axis=1)
+    hist, _ = np.histogram(dens, bins=bins, range=(0.0, 1.0))
+    return hist
+
+
+# ---------------------------------------------------------------------------
+# Bandwidth / intensity models (paper §4.2, §5)
+# ---------------------------------------------------------------------------
+def spmv_naive_bytes(nnz: int, val_bytes: int = 4, idx_bytes: int = 4) -> int:
+    """Paper's naive model: only the nonzeros move (12B/nnz at f64+i32)."""
+    return nnz * (val_bytes + idx_bytes)
+
+
+def spmv_app_bytes(
+    n_rows: int, n_cols: int, nnz: int, val_bytes: int = 4, idx_bytes: int = 4
+) -> int:
+    """Paper's application bytes: 2n*val + (n+1)*idx + tau*(val+idx)."""
+    return (
+        (n_rows + n_cols) * val_bytes
+        + (n_rows + 1) * idx_bytes
+        + nnz * (val_bytes + idx_bytes)
+    )
+
+
+def spmm_app_bytes(
+    n_rows: int,
+    n_cols: int,
+    nnz: int,
+    k: int,
+    val_bytes: int = 4,
+    idx_bytes: int = 4,
+) -> int:
+    """Paper §5: 8mk + 8nk + 4(n+1) + 12tau, parameterized by dtype sizes."""
+    return (
+        (n_rows + n_cols) * k * val_bytes
+        + (n_rows + 1) * idx_bytes
+        + nnz * (val_bytes + idx_bytes)
+    )
+
+
+def flop_to_byte_spmv(val_bytes: int = 4, idx_bytes: int = 4) -> float:
+    """2 flops per nnz over (val+idx) bytes: paper's 2/12 at f64."""
+    return 2.0 / (val_bytes + idx_bytes)
+
+
+def flop_to_byte_spmm(
+    n_rows: int, n_cols: int, nnz: int, k: int, val_bytes: int = 4, idx_bytes: int = 4
+) -> float:
+    return (2.0 * nnz * k) / spmm_app_bytes(
+        n_rows, n_cols, nnz, k, val_bytes, idx_bytes
+    )
+
+
+def matrix_bandwidth(a: CSRMatrix) -> int:
+    """Graph-theoretic bandwidth max|i-j| over nonzeros (RCM's objective)."""
+    rows = np.repeat(np.arange(a.shape[0]), np.diff(a.indptr))
+    if rows.size == 0:
+        return 0
+    return int(np.abs(rows - a.indices).max())

@@ -1,0 +1,114 @@
+"""Partitioning sparse matrices across mesh shards.
+
+The paper's 61 cores pull rows dynamically off a shared queue; a distributed
+mesh needs a static partition.  We provide:
+
+* ``rows_balanced``  — contiguous row ranges with ~equal nnz (the 1-D
+  row-parallel decomposition; x is all-gathered or rotated).
+* ``grid_2d``        — a (R x C) block partition for 2-D meshes: each shard
+  owns a row-slab x col-slab; x moves along columns, y reduces along rows
+  (maps to ("data","model") axes).
+
+Partitions are computed on host numpy and return per-shard CSR submatrices
+padded to a common nnz/row-count so the shards can be stacked into one
+device array for shard_map.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .formats import CSRMatrix
+
+__all__ = ["rows_balanced", "RowPartition", "grid_2d", "stack_csr_shards"]
+
+
+@dataclasses.dataclass
+class RowPartition:
+    bounds: np.ndarray  # (n_shards + 1,) row boundaries
+    shards: list[CSRMatrix]
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    def nnz_imbalance(self) -> float:
+        nnzs = np.array([s.nnz for s in self.shards], dtype=np.float64)
+        return float(nnzs.max() / max(nnzs.mean(), 1e-9))
+
+
+def rows_balanced(a: CSRMatrix, n_shards: int) -> RowPartition:
+    """Contiguous row ranges with approximately equal nnz per shard."""
+    m, n = a.shape
+    target = np.linspace(0, a.nnz, n_shards + 1)
+    bounds = np.searchsorted(a.indptr, target, side="left")
+    bounds[0], bounds[-1] = 0, m
+    bounds = np.maximum.accumulate(bounds)  # keep monotone
+    shards = []
+    for s in range(n_shards):
+        lo, hi = int(bounds[s]), int(bounds[s + 1])
+        ip = (a.indptr[lo : hi + 1] - a.indptr[lo]).astype(a.indptr.dtype)
+        sl = slice(a.indptr[lo], a.indptr[hi])
+        shards.append(CSRMatrix((hi - lo, n), ip, a.indices[sl].copy(), a.data[sl].copy()))
+    return RowPartition(bounds.astype(np.int64), shards)
+
+
+def grid_2d(a: CSRMatrix, grid: tuple[int, int]) -> list[list[CSRMatrix]]:
+    """(R x C) block partition: shard (i,j) owns rows-slab i x cols-slab j.
+
+    Column indices inside each shard are rebased to the slab-local range so
+    each shard multiplies against its local x slice.
+    """
+    R, C = grid
+    m, n = a.shape
+    rb = np.linspace(0, m, R + 1).astype(np.int64)
+    cb = np.linspace(0, n, C + 1).astype(np.int64)
+    out: list[list[CSRMatrix]] = []
+    for i in range(R):
+        row: list[CSRMatrix] = []
+        lo, hi = rb[i], rb[i + 1]
+        for j in range(C):
+            cl, ch = cb[j], cb[j + 1]
+            sub_indptr = np.zeros(hi - lo + 1, dtype=a.indptr.dtype)
+            idx_chunks, val_chunks = [], []
+            for r in range(lo, hi):
+                s, e = a.indptr[r], a.indptr[r + 1]
+                cols = a.indices[s:e]
+                sel = (cols >= cl) & (cols < ch)
+                idx_chunks.append((cols[sel] - cl).astype(a.indices.dtype))
+                val_chunks.append(a.data[s:e][sel])
+                sub_indptr[r - lo + 1] = sub_indptr[r - lo] + sel.sum()
+            row.append(
+                CSRMatrix(
+                    (int(hi - lo), int(ch - cl)),
+                    sub_indptr,
+                    np.concatenate(idx_chunks) if idx_chunks else np.zeros(0, a.indices.dtype),
+                    np.concatenate(val_chunks) if val_chunks else np.zeros(0, a.data.dtype),
+                )
+            )
+        out.append(row)
+    return out
+
+
+def stack_csr_shards(shards: list[CSRMatrix]) -> dict[str, np.ndarray]:
+    """Pad shards to a common (rows, nnz) and stack for shard_map.
+
+    Padding rows are empty; padding nnz entries point at column 0 with value
+    0.0 (harmless under gather+FMA, same trick as SELL padding).
+    """
+    max_rows = max(s.shape[0] for s in shards)
+    max_nnz = max(s.nnz for s in shards)
+    P = len(shards)
+    indptr = np.zeros((P, max_rows + 1), dtype=shards[0].indptr.dtype)
+    indices = np.zeros((P, max_nnz), dtype=shards[0].indices.dtype)
+    data = np.zeros((P, max_nnz), dtype=shards[0].data.dtype)
+    n_rows = np.zeros((P,), dtype=np.int32)
+    for p, s in enumerate(shards):
+        r = s.shape[0]
+        indptr[p, : r + 1] = s.indptr
+        indptr[p, r + 1 :] = s.indptr[-1]
+        indices[p, : s.nnz] = s.indices
+        data[p, : s.nnz] = s.data
+        n_rows[p] = r
+    return {"indptr": indptr, "indices": indices, "data": data, "n_rows": n_rows}

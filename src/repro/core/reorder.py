@@ -1,0 +1,85 @@
+"""Matrix (re)ordering — the paper's §4.4 densification study.
+
+The paper applies reverse Cuthill-McKee (RCM) to group nonzeros near the
+diagonal, improving UCLD and reducing how often the input vector must be
+re-fetched into each core's private cache.  We implement RCM ourselves
+(BFS with degree-sorted neighbor expansion, reversed), handle disconnected
+components, and validate against scipy in the test-suite.
+
+Orderings operate on the *symmetrized* pattern of A (RCM is defined for
+symmetric matrices; the paper's suite is square), and are returned as
+``perm`` arrays mapping new index -> old index (use ``CSRMatrix.permuted``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .formats import CSRMatrix
+
+__all__ = ["rcm", "degree_order", "random_order", "symmetrize_pattern"]
+
+
+def symmetrize_pattern(a: CSRMatrix) -> tuple[np.ndarray, np.ndarray]:
+    """Return CSR (indptr, indices) of pattern(A + A^T) without values."""
+    m, n = a.shape
+    assert m == n, "orderings are defined for square matrices"
+    rows = np.repeat(np.arange(m, dtype=np.int64), np.diff(a.indptr))
+    cols = a.indices.astype(np.int64)
+    # union of (r,c) and (c,r), dedup
+    key = np.concatenate([rows * n + cols, cols * n + rows])
+    key = np.unique(key)
+    srows, scols = key // n, key % n
+    indptr = np.zeros(m + 1, dtype=np.int64)
+    np.add.at(indptr, srows + 1, 1)
+    indptr = np.cumsum(indptr)
+    return indptr, scols.astype(np.int32)
+
+
+def rcm(a: CSRMatrix) -> np.ndarray:
+    """Reverse Cuthill-McKee ordering (new -> old permutation).
+
+    BFS from a minimum-degree vertex of each connected component, expanding
+    neighbors in ascending-degree order, then reversing the whole order —
+    exactly the classic algorithm the paper uses via MATLAB's ``symrcm``.
+    """
+    indptr, indices = symmetrize_pattern(a)
+    m = a.shape[0]
+    degree = np.diff(indptr)
+    visited = np.zeros(m, dtype=bool)
+    order = np.empty(m, dtype=np.int64)
+    pos = 0
+    # Process components in order of their min-degree representative.
+    candidates = np.argsort(degree, kind="stable")
+    for seed in candidates:
+        if visited[seed]:
+            continue
+        # BFS with degree-sorted expansion.
+        visited[seed] = True
+        queue = [int(seed)]
+        head = 0
+        while head < len(queue):
+            u = queue[head]
+            head += 1
+            order[pos] = u
+            pos += 1
+            nbrs = indices[indptr[u] : indptr[u + 1]]
+            nbrs = nbrs[~visited[nbrs]]
+            if nbrs.size:
+                nbrs = nbrs[np.argsort(degree[nbrs], kind="stable")]
+                visited[nbrs] = True
+                queue.extend(int(v) for v in nbrs)
+    assert pos == m
+    return order[::-1].copy()  # the "reverse" in RCM
+
+
+def degree_order(a: CSRMatrix, descending: bool = True) -> np.ndarray:
+    """Order rows by (symmetrized) degree — a cheap locality baseline."""
+    indptr, _ = symmetrize_pattern(a)
+    degree = np.diff(indptr)
+    key = -degree if descending else degree
+    return np.argsort(key, kind="stable")
+
+
+def random_order(a: CSRMatrix, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.permutation(a.shape[0])

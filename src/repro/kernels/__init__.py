@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+bcsr_spmm -- register blocking (Table 2) adapted to MXU tiles.
+sell_spmv -- vgatherd-style gather SpMV (Fig 4/5) adapted to SELL-C-sigma.
+ops       -- jit'd public wrappers;  ref -- pure-jnp oracles.
+"""
+from . import ops, ref  # noqa: F401
+from .bcsr_spmm import bcsr_spmm_pallas  # noqa: F401
+from .sell_spmv import sell_spmv_pallas  # noqa: F401

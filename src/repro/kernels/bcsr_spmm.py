@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: block-sparse (BCSR) matrix x dense matrix.
+
+The TPU adaptation of the paper's register blocking (§4.5, Table 2).  On the
+Phi a "register block" is an 8x{1..8} dense patch streamed through FMA
+registers; on TPU the natural patch is one MXU pass — a (bm, bk) = (128, 128)
+(or (8, 128) VPU) tile.  The stored-block stream maps onto the Pallas grid:
+
+  grid = (n_tiles_N, n_blocks)            # inner dim walks stored blocks
+  A blocks   : (1, bm, bk) tile k         # linear stream, double-buffered DMA
+  X          : (bk, bn)    tile (cols[k], j)  # gathered by *scalar prefetch*
+  Y          : (bm, bn)    tile (rows[k], j)  # revisited while row constant
+
+Scalar-prefetched ``block_rows``/``block_cols`` drive the index maps — this
+is the vgatherd of the TPU version: the irregular gather is resolved at DMA
+descriptor time, not in the compute inner loop.  Because blocks are sorted by
+row, output revisits are consecutive and the accumulator stays resident in
+VMEM; it is written back exactly once per (row, j) — the analogue of the
+paper's NRNGO streaming stores (the output is never read from HBM).
+
+The paper's Table 2 economics carry over verbatim: stored zeros cost
+bandwidth, so the ops layer exposes ``fill_ratio`` and benchmarks sweep block
+shapes exactly like Table 2.
+
+Grid dim 0 (N tiles) is "parallel"; dim 1 (the block stream) is "arbitrary"
+(sequential) because of the accumulation dependency.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["bcsr_spmm_pallas"]
+
+
+def _kernel(block_rows, block_cols, a_ref, x_ref, o_ref):
+    del block_cols  # used only by the index maps
+    k = pl.program_id(1)
+    # First visit of this output row? (k==0 or the row id changed.)
+    prev = block_rows[jnp.maximum(k - 1, 0)]
+    is_first = jnp.logical_or(k == 0, block_rows[k] != prev)
+
+    @pl.when(is_first)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[0],
+        x_ref[...],
+        preferred_element_type=o_ref.dtype,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_block_rows", "n_tile", "interpret", "out_dtype"),
+)
+def bcsr_spmm_pallas(
+    block_rows: jax.Array,  # (n_blocks,) int32, sorted
+    block_cols: jax.Array,  # (n_blocks,) int32
+    blocks: jax.Array,  # (n_blocks, bm, bk)
+    x_blocked: jax.Array,  # (n_col_blocks, bk, k)
+    *,
+    n_block_rows: int,
+    n_tile: int = 128,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Returns (n_block_rows, bm, k) = A @ X with A block-sparse.
+
+    Requires every block row to own >= 1 stored block (ops.bcsr_prepare pads
+    empty rows with an explicit zero block, mirroring the paper's fill-in).
+    """
+    n_blocks, bm, bk = blocks.shape
+    n_col_blocks, bk2, k = x_blocked.shape
+    assert bk == bk2, (bk, bk2)
+    assert k % n_tile == 0 or k < n_tile, (k, n_tile)
+    bn = min(n_tile, k)
+    x2d = x_blocked.reshape(n_col_blocks * bk, k)
+
+    grid = (k // bn, n_blocks)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (1, bm, bk), lambda j, t, rows, cols: (t, 0, 0)
+                ),
+                pl.BlockSpec(
+                    (bk, bn), lambda j, t, rows, cols: (cols[t], j)
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (bm, bn), lambda j, t, rows, cols: (rows[t], j)
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_block_rows * bm, k), out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(block_rows, block_cols, blocks, x2d)
+    return out.reshape(n_block_rows, bm, k)

@@ -1,0 +1,189 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles everything the raw kernels don't: empty-block-row padding, x column
+slabbing (cache blocking) for matrices whose x does not fit in VMEM, output
+un-permutation for SELL, and interpret-mode selection (interpret=True on CPU
+— the kernels' TPU lowering is exercised in the dry-run, their numerics
+here).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import BCSRMatrix, SELLMatrix
+from .bcsr_spmm import bcsr_spmm_pallas
+from .sell_spmv import sell_spmv_pallas
+
+__all__ = [
+    "on_cpu",
+    "bcsr_prepare",
+    "bcsr_spmm",
+    "sell_prepare",
+    "sell_spmv",
+    "VMEM_BUDGET_BYTES",
+]
+
+# Conservative per-kernel VMEM working-set budget (v5e has ~128 MiB VMEM; we
+# leave room for double buffering and the output accumulator).
+VMEM_BUDGET_BYTES = 32 * 1024 * 1024
+
+
+def on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+# ---------------------------------------------------------------------------
+# BCSR
+# ---------------------------------------------------------------------------
+def bcsr_prepare(a: BCSRMatrix) -> dict[str, Any]:
+    """Host-side prep: guarantee every block row has >= 1 stored block.
+
+    Empty block rows get one explicit zero block at column 0 (paper-style
+    fill-in), keeping the kernel's "first visit initializes the tile"
+    invariant true for every output row.
+    """
+    gm, _ = a.grid_shape
+    present = np.zeros(gm, dtype=bool)
+    present[a.block_rows] = True
+    missing = np.nonzero(~present)[0].astype(np.int32)
+    bm, bk = a.block_shape
+    block_rows = np.concatenate([a.block_rows, missing])
+    block_cols = np.concatenate([a.block_cols, np.zeros_like(missing)])
+    blocks = np.concatenate(
+        [a.blocks, np.zeros((missing.shape[0], bm, bk), a.blocks.dtype)]
+    )
+    order = np.argsort(block_rows, kind="stable")
+    return {
+        "block_rows": jnp.asarray(block_rows[order]),
+        "block_cols": jnp.asarray(block_cols[order]),
+        "blocks": jnp.asarray(blocks[order]),
+        "grid_shape": a.grid_shape,
+        "block_shape": a.block_shape,
+        "shape": a.shape,
+    }
+
+
+def bcsr_spmm(
+    prep: dict[str, Any],
+    x: jax.Array,
+    *,
+    n_tile: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Y = A @ X. x: (n, k) unblocked; returns (m, k) unpadded."""
+    if interpret is None:
+        interpret = on_cpu()
+    gm, gn = prep["grid_shape"]
+    bm, bk = prep["block_shape"]
+    m, n = prep["shape"]
+    k = x.shape[-1]
+    x_pad = jnp.zeros((gn * bk, k), x.dtype).at[:n].set(x)
+    out = bcsr_spmm_pallas(
+        prep["block_rows"],
+        prep["block_cols"],
+        prep["blocks"],
+        x_pad.reshape(gn, bk, k),
+        n_block_rows=gm,
+        n_tile=n_tile,
+        interpret=interpret,
+    )
+    return out.reshape(gm * bm, k)[:m]
+
+
+# ---------------------------------------------------------------------------
+# SELL
+# ---------------------------------------------------------------------------
+def sell_prepare(a: SELLMatrix, chunk_tile: int = 8) -> dict[str, Any]:
+    """Host-side prep: pad the chunk count to a multiple of chunk_tile."""
+    n_chunks = a.n_chunks
+    pad = (-n_chunks) % chunk_tile
+    cols, vals, row_perm = a.cols, a.vals, a.row_perm
+    if pad:
+        cols = np.concatenate([cols, np.zeros((pad,) + cols.shape[1:], cols.dtype)])
+        vals = np.concatenate([vals, np.zeros((pad,) + vals.shape[1:], vals.dtype)])
+        row_perm = np.concatenate(
+            [row_perm, np.full(pad * a.C, -1, row_perm.dtype)]
+        )
+    return {
+        "cols": jnp.asarray(cols),
+        "vals": jnp.asarray(vals),
+        "row_perm": jnp.asarray(row_perm),
+        "shape": a.shape,
+        "chunk_tile": chunk_tile,
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "interpret"))
+def _sell_spmv_jit(prep_cols, prep_vals, prep_perm, x, *, n_rows, interpret):
+    sums = sell_spmv_pallas(
+        prep_cols, prep_vals, x, chunk_tile=8, interpret=interpret
+    )
+    valid = prep_perm >= 0
+    y = jnp.zeros((n_rows,), x.dtype)
+    return y.at[jnp.where(valid, prep_perm, 0)].add(
+        jnp.where(valid, sums, 0.0)
+    )
+
+
+def sell_spmv(
+    prep: dict[str, Any], x: jax.Array, *, interpret: bool | None = None
+) -> jax.Array:
+    """y = A @ x; un-permutes the kernel's sorted output."""
+    if interpret is None:
+        interpret = on_cpu()
+    m, n = prep["shape"]
+    return _sell_spmv_jit(
+        prep["cols"], prep["vals"], prep["row_perm"], x,
+        n_rows=m, interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Cache-blocked SELL: column slabs for matrices whose x exceeds VMEM
+# ---------------------------------------------------------------------------
+def sell_prepare_blocked(a, n_slabs: int, chunk_tile: int = 8,
+                         C: int = 8, sigma: int = 64) -> dict[str, Any]:
+    """Split A into column slabs, one SELL per slab (paper refs' cache
+    blocking, Nishtala et al.): the kernel then keeps only an x-slab
+    resident in VMEM per pass instead of the whole vector."""
+    from repro.core.formats import CSRMatrix, sell_from_csr
+    import numpy as np
+
+    m, n = a.shape
+    bounds = np.linspace(0, n, n_slabs + 1).astype(np.int64)
+    slabs = []
+    for s in range(n_slabs):
+        lo, hi = int(bounds[s]), int(bounds[s + 1])
+        indptr = np.zeros(m + 1, dtype=a.indptr.dtype)
+        idx_parts, val_parts = [], []
+        for r in range(m):
+            st, en = a.indptr[r], a.indptr[r + 1]
+            cols_r = a.indices[st:en]
+            sel = (cols_r >= lo) & (cols_r < hi)
+            idx_parts.append((cols_r[sel] - lo).astype(a.indices.dtype))
+            val_parts.append(a.data[st:en][sel])
+            indptr[r + 1] = indptr[r] + int(sel.sum())
+        sub = CSRMatrix(
+            (m, hi - lo), indptr,
+            np.concatenate(idx_parts) if idx_parts else np.zeros(0, a.indices.dtype),
+            np.concatenate(val_parts) if val_parts else np.zeros(0, a.data.dtype),
+        )
+        slabs.append(sell_prepare(sell_from_csr(sub, C=C, sigma=sigma,
+                                                width_align=8), chunk_tile))
+    return {"slabs": slabs, "bounds": bounds, "shape": a.shape}
+
+
+def sell_spmv_blocked(prep: dict[str, Any], x: jax.Array,
+                      *, interpret: bool | None = None) -> jax.Array:
+    """y = A @ x with column-slab accumulation (each slab's x fits VMEM)."""
+    m, _ = prep["shape"]
+    y = jnp.zeros((m,), x.dtype)
+    for s, slab in enumerate(prep["slabs"]):
+        lo, hi = int(prep["bounds"][s]), int(prep["bounds"][s + 1])
+        y = y + sell_spmv(slab, x[lo:hi], interpret=interpret)
+    return y

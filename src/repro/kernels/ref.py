@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the allclose sweeps in tests/test_kernels.py.
+They intentionally share no code with the kernels themselves (the core.spmv
+reference tier is a third, independently-written implementation used in the
+benchmarks).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["bcsr_spmm_ref", "sell_spmv_ref", "banded_attention_scores_ref"]
+
+
+def bcsr_spmm_ref(blocks, block_rows, block_cols, x_blocked, n_block_rows):
+    """Y = A @ X.  blocks (B, bm, bk); x_blocked (Gn, bk, k).
+
+    Returns (n_block_rows, bm, k).  Written with an explicit python loop over
+    stored blocks (shapes are concrete in tests) — deliberately the dumbest
+    correct thing.
+    """
+    B, bm, bk = blocks.shape
+    k = x_blocked.shape[-1]
+    out = jnp.zeros((n_block_rows, bm, k), jnp.float32)
+    for t in range(B):
+        r = int(block_rows[t])
+        c = int(block_cols[t])
+        out = out.at[r].add(
+            jnp.dot(
+                blocks[t].astype(jnp.float32),
+                x_blocked[c].astype(jnp.float32),
+            )
+        )
+    return out
+
+
+def sell_spmv_ref(cols, vals, x):
+    """Per-sorted-row partial sums for SELL chunks.
+
+    cols/vals (n_chunks, C, W); x (n,).  Returns (n_chunks * C,) sums in
+    *sorted* row order (the caller un-permutes) — matching the kernel output.
+    """
+    gathered = x[cols]  # (n_chunks, C, W)
+    return (vals * gathered).sum(axis=-1).reshape(-1)
+
+
+def banded_attention_scores_ref(q, k, window):
+    """Banded QK^T for the sliding-window attention integration test.
+
+    q, k: (seq, d). Returns (seq, seq) scores masked outside |i-j| < window
+    (causal side only: j <= i, i - j < window).
+    """
+    seq = q.shape[0]
+    scores = q @ k.T
+    i = jnp.arange(seq)[:, None]
+    j = jnp.arange(seq)[None, :]
+    mask = (j <= i) & (i - j < window)
+    return jnp.where(mask, scores, -jnp.inf)

@@ -1,0 +1,246 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST be the first two lines, before ANY other import (jax locks the
+# device count at first init).  Hence no `from __future__` here.
+DOC = """Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell on 512 placeholder CPU devices, and extract the roofline inputs
+(analyzer FLOPs / HBM bytes / collective bytes per chip, memory analysis,
+XLA cost analysis) into JSON files under experiments/dryrun/.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init); do not set that flag anywhere global — smoke tests and
+benchmarks are supposed to see 1 device.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-moe-1b-a400m --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both
+  python -m repro.launch.dryrun --arch llama3-405b --shape train_4k \
+      --variant skip_masked_blocks=True --tag triangular
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (
+    ARCH_IDS,
+    SHAPES,
+    cell_supported,
+    get_config,
+    input_specs,
+)
+from repro.models.common import set_active_rules
+from repro.models.lm import (ModelConfig, abstract_model, decode_step,
+    init_model, loss_fn, prefill)
+from repro.optim.adamw import OptimConfig, adamw_init
+from repro.runtime.trainer import make_train_step
+from .hlo_analysis import analyze_hlo
+from .mesh import make_production_mesh
+from .shardspecs import (
+    batch_shardings,
+    decode_state_shardings,
+    opt_shardings,
+    param_shardings,
+    rules_for,
+)
+
+# Per-arch dry-run knobs: microbatch count for the 1M-token train batches and
+# optimizer dtype trims for the biggest models (DESIGN.md §5).
+TRAIN_KNOBS: dict[str, dict] = {
+    "llama3-405b": {"microbatches": 16, "moment_dtype": jnp.bfloat16},
+    "deepseek-67b": {"microbatches": 8},
+    "qwen2-vl-72b": {"microbatches": 8},
+    "llama4-scout-17b-a16e": {"microbatches": 8},
+    "rwkv6-7b": {"microbatches": 4},
+    "zamba2-2.7b": {"microbatches": 4},
+    "h2o-danube-3-4b": {"microbatches": 4},
+    "qwen1.5-4b": {"microbatches": 4},
+    "granite-moe-1b-a400m": {"microbatches": 2},
+    "whisper-tiny": {"microbatches": 2},
+}
+
+
+def apply_variant(cfg: ModelConfig, variant: dict) -> ModelConfig:
+    fields = {f.name for f in dataclasses.fields(cfg)}
+    updates = {k: v for k, v in variant.items() if k in fields}
+    if isinstance(updates.get("sparse_ffn"), str):
+        # e.g. --variant sparse_ffn=structured -> the paper technique as the
+        # FFN layer, 16 diagonal groups + 1-group banded halo (DESIGN §4)
+        from repro.models.ffn import SparseFFNConfig
+
+        updates["sparse_ffn"] = SparseFFNConfig(
+            kind=updates["sparse_ffn"], n_groups=16, band=1
+        )
+    return dataclasses.replace(cfg, **updates) if updates else cfg
+
+
+def lower_cell(cfg: ModelConfig, shape_name: str, mesh, knobs: dict):
+    """Build (fn, kwargs of ShapeDtypeStructs, in_shardings kwargs)."""
+    rules = rules_for(mesh)
+    set_active_rules(rules)
+    sh = SHAPES[shape_name]
+    specs = input_specs(cfg, shape_name)
+    pshapes, axes = abstract_model(cfg, 0)
+    p_sh = param_shardings(mesh, rules, axes, pshapes)
+
+    if sh.kind == "train":
+        opt_cfg = OptimConfig(moment_dtype=knobs.get("moment_dtype", jnp.float32))
+        oshapes = jax.eval_shape(lambda: adamw_init(pshapes, opt_cfg))
+        o_sh = opt_shardings(mesh, rules, axes, pshapes, oshapes)
+        b_sh = batch_shardings(mesh, cfg, specs["batch"])
+        step = make_train_step(cfg, opt_cfg, knobs.get("microbatches", 1))
+        fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh), donate_argnums=(0, 1))
+        args = (pshapes, oshapes, specs["batch"])
+    elif sh.kind == "prefill":
+        b_sh = batch_shardings(mesh, cfg, specs["batch"])
+        fn = jax.jit(
+            lambda p, b: prefill(cfg, p, b, max_seq=sh.seq),
+            in_shardings=(p_sh, b_sh),
+        )
+        args = (pshapes, specs["batch"])
+    elif sh.kind == "decode":
+        s_sh = decode_state_shardings(mesh, cfg, specs["state"])
+        t_sh = batch_shardings(mesh, cfg, {"tokens": specs["tokens"]})["tokens"]
+        fn = jax.jit(
+            lambda p, s, t: decode_step(cfg, p, s, t),
+            in_shardings=(p_sh, s_sh, t_sh),
+            donate_argnums=(1,),
+        )
+        args = (pshapes, specs["state"], specs["tokens"])
+    else:
+        raise ValueError(sh.kind)
+    return fn, args
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, variant: dict,
+             tag: str, outdir: str) -> dict:
+    cfg = apply_variant(get_config(arch), variant)
+    ok, why = cell_supported(cfg, shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "variant": {k: str(v) for k, v in variant.items()}, "tag": tag,
+    }
+    if not ok:
+        record["status"] = "skipped"
+        record["reason"] = why
+        return record
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    knobs = dict(TRAIN_KNOBS.get(arch, {}))
+    t0 = time.perf_counter()
+    fn, args = lower_cell(cfg, shape_name, mesh, knobs)
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+    record["lower_s"] = round(t_lower, 2)
+    record["compile_s"] = round(t_compile, 2)
+    try:
+        mem = compiled.memory_analysis()
+        record["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        }
+    except Exception as e:  # CPU backend may not support it
+        record["memory"] = {"error": str(e)}
+    try:
+        ca = compiled.cost_analysis()
+        record["xla_cost"] = {
+            k: float(v) for k, v in ca.items()
+            if k in ("flops", "bytes accessed", "transcendentals", "utilization")
+        }
+    except Exception as e:
+        record["xla_cost"] = {"error": str(e)}
+    t0 = time.perf_counter()
+    text = compiled.as_text()
+    cost = analyze_hlo(text, world_size=mesh.size)
+    record["analyze_s"] = round(time.perf_counter() - t0, 2)
+    record["hlo_chars"] = len(text)
+    # persist the HLO so analyzer refinements can rescore without recompiling
+    import gzip
+
+    hlo_name = (f"{arch}__{shape_name}__{mesh_name}__{tag}.hlo.gz")
+    with gzip.open(os.path.join(outdir, hlo_name), "wt") as f:
+        f.write(text)
+    record["per_device"] = {
+        "flops": cost.flops,
+        "hbm_bytes": cost.hbm_bytes,
+        "collective_bytes": cost.collective_bytes,
+        "collectives": {k: round(v) for k, v in cost.collectives.items()},
+    }
+    record["status"] = "ok"
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--variant", nargs="*", default=[],
+                    help="cfg overrides k=v (python literals)")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    variant = {}
+    for kv in args.variant:
+        k, v = kv.split("=", 1)
+        try:
+            import ast
+            variant[k] = ast.literal_eval(v)
+        except Exception:
+            variant[k] = v
+
+    cells = []
+    if args.all:
+        cells = [(a, s) for a in ARCH_IDS for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.outdir, exist_ok=True)
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            name = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}__{args.tag}"
+            out_path = os.path.join(args.outdir, name + ".json")
+            try:
+                rec = run_cell(arch, shape, mp, variant, args.tag, args.outdir)
+            except Exception as e:
+                failures += 1
+                rec = {
+                    "arch": arch, "shape": shape,
+                    "mesh": "2x16x16" if mp else "16x16",
+                    "status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:],
+                }
+            with open(out_path, "w") as f:
+                json.dump(rec, f, indent=1)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                pd = rec["per_device"]
+                extra = (f" flops/dev={pd['flops']:.3e}"
+                         f" coll/dev={pd['collective_bytes']:.3e}B"
+                         f" compile={rec['compile_s']}s")
+            print(f"[{status:7s}] {name}{extra}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Re-run the HLO analyzer over saved .hlo.gz dumps (no recompilation).
+
+Also provides ``--debug CELL`` to print the top byte/flop contributors per
+(computation, op) — the profiling view used in §Perf iterations.
+
+Usage:
+  python -m repro.launch.rescore --dir experiments/dryrun
+  python -m repro.launch.rescore --debug 'llama3-405b__train_4k__16x16__baseline'
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+import re
+
+from .hlo_analysis import (
+    HLOCost,
+    _parse_op_line,
+    _shape_bytes_elems,
+    _split_computations,
+    analyze_hlo,
+)
+
+WORLD = {"16x16": 256, "2x16x16": 512}
+
+
+def rescore(dirname: str):
+    for hlo_path in sorted(glob.glob(os.path.join(dirname, "*.hlo.gz"))):
+        json_path = hlo_path[: -len(".hlo.gz")] + ".json"
+        if not os.path.exists(json_path):
+            continue
+        with open(json_path) as f:
+            rec = json.load(f)
+        with gzip.open(hlo_path, "rt") as f:
+            text = f.read()
+        cost = analyze_hlo(text, WORLD[rec["mesh"]])
+        rec["per_device"] = {
+            "flops": cost.flops,
+            "hbm_bytes": cost.hbm_bytes,
+            "collective_bytes": cost.collective_bytes,
+            "collectives": {k: round(v) for k, v in cost.collectives.items()},
+        }
+        with open(json_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[rescored] {os.path.basename(json_path)} "
+              f"flops={cost.flops:.3e} hbm={cost.hbm_bytes:.3e} "
+              f"coll={cost.collective_bytes:.3e}")
+
+
+def debug_cell(dirname: str, cell: str, top: int = 25):
+    """Attribute bytes/flops to (computation, op) pairs with trip weights."""
+    path = os.path.join(dirname, cell + ".hlo.gz")
+    with gzip.open(path, "rt") as f:
+        text = f.read()
+    comps = _split_computations(text)
+    # compute trip multiplier per computation by walking from entry
+    from .hlo_analysis import _trip_count
+
+    mult: dict[str, float] = {}
+
+    def walk(name: str, k: float, stack=()):
+        if name not in comps or name in stack:
+            return
+        mult[name] = mult.get(name, 0) + k
+        for line in comps[name]:
+            parsed = _parse_op_line(line)
+            if not parsed:
+                continue
+            _, _, op, _, _ = parsed
+            rest = line
+            if op == "while":
+                bm = re.search(r"body=%?([\w\.\-_]+)", rest)
+                cm = re.search(r"condition=%?([\w\.\-_]+)", rest)
+                trips = _trip_count(comps[cm.group(1)]) if cm and cm.group(1) in comps else 1
+                if bm:
+                    walk(bm.group(1), k * trips, stack + (name,))
+            elif op == "fusion":
+                fm = re.search(r"calls=%?([\w\.\-_]+)", rest)
+                if fm:
+                    walk(fm.group(1), k, stack + (name,))
+            elif op in ("call", "conditional"):
+                for cm2 in re.findall(r"(?:to_apply|branch_computations)=\{?%?([\w\.\-_]+)", rest):
+                    walk(cm2, k, stack + (name,))
+
+    entry = None
+    for line in text.splitlines():
+        if line.strip().startswith("ENTRY"):
+            entry = line.strip().split()[1].lstrip("%").split("(")[0]
+            break
+    walk(entry or max(comps, key=lambda c: len(comps[c])), 1.0)
+
+    rows = []
+    for cname, k in mult.items():
+        shapes = {}
+        for line in comps[cname]:
+            parsed = _parse_op_line(line)
+            if not parsed:
+                continue
+            nm, ty, op, args, _ = parsed
+            shapes[nm] = ty
+            ob = _shape_bytes_elems(ty)[0]
+            opb = sum(_shape_bytes_elems(shapes.get(o, ""))[0]
+                      for o in re.findall(r"(%[\w\.\-_]+)", args))
+            rows.append((ob + opb, k, (ob + opb) * k, cname, op, nm))
+    rows.sort(key=lambda r: -r[2])
+    print(f"{'weighted_bytes':>15s} {'trips':>8s}  computation :: op")
+    for ob, k, w, cname, op, nm in rows[:top]:
+        print(f"{w:15.3e} {k:8.0f}  {cname[:48]} :: {op} {nm[:30]}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--debug", default=None)
+    args = ap.parse_args()
+    if args.debug:
+        debug_cell(args.dir, args.debug)
+    else:
+        rescore(args.dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""Roofline analysis over the dry-run JSONs (§Roofline of EXPERIMENTS.md).
+
+Per (arch x shape x mesh) cell:
+
+  compute term    = flops_per_device / 197e12        [bf16 MXU peak, v5e]
+  memory term     = hbm_bytes_per_device / 819e9     [HBM BW, v5e]
+  collective term = collective_bytes_per_device / 50e9  [one ICI link]
+
+All three in seconds-per-step; the max is the bottleneck, and
+bottleneck / sum-ish gives the achievable fraction.  MODEL_FLOPS uses the
+6ND convention (dense train), 2ND for forward-only (prefill/decode), and
+N_active for MoE; its ratio against compiled FLOPs exposes remat recompute
+and padding waste.
+
+Usage:
+  python -m repro.launch.roofline [--dir experiments/dryrun] [--tag baseline]
+                                  [--md experiments/roofline.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+LINK_BW = 50e9  # B/s / link (conservative: single ICI link)
+
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+# Active / total parameter counts (computed from the configs; MoE uses the
+# top-k active expert subset + shared weights).
+from repro.configs import ARCH_IDS, SHAPES, get_config  # noqa: E402
+from repro.models.lm import abstract_model  # noqa: E402
+
+import jax  # noqa: E402
+
+
+def param_counts(arch: str) -> tuple[int, int]:
+    """(total, active) parameter counts."""
+    cfg = get_config(arch)
+    shapes, _ = abstract_model(cfg)
+    total = sum(int(v.size) for v in jax.tree.leaves(shapes))
+    active = total
+    if cfg.moe is not None:
+        moe_leaves = shapes["blocks"]["ffn"]
+        moe_total = sum(
+            int(v.size) for k, v in _flat(moe_leaves) if k != "router"
+        )
+        active = total - moe_total + moe_total * cfg.moe.top_k // cfg.moe.n_experts
+    return total, active
+
+
+def _flat(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _flat(v, f"{prefix}{k}/")
+    else:
+        yield prefix.rstrip("/").split("/")[-1], tree
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6*N_active*D (train), 2*N_active*D (prefill), 2*N_active*B (decode)."""
+    sh = SHAPES[shape_name]
+    _, active = param_counts(arch)
+    if sh.kind == "train":
+        return 6.0 * active * sh.batch * sh.seq
+    if sh.kind == "prefill":
+        return 2.0 * active * sh.batch * sh.seq
+    return 2.0 * active * sh.batch  # decode: one token per sequence
+
+
+def terms(rec: dict) -> dict:
+    chips = CHIPS[rec["mesh"]]
+    pd = rec["per_device"]
+    t_comp = pd["flops"] / PEAK_FLOPS
+    t_mem = pd["hbm_bytes"] / HBM_BW
+    t_coll = pd["collective_bytes"] / LINK_BW
+    bound = max(
+        ("compute", t_comp), ("memory", t_mem), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    mf = model_flops(rec["arch"], rec["shape"]) / chips
+    return {
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "bottleneck": bound,
+        "model_flops_per_chip": mf,
+        "useful_flops_ratio": mf / pd["flops"] if pd["flops"] else 0.0,
+        # step time if perfectly overlapped = max term; roofline fraction =
+        # compute term / step time (how close the step is to MXU-bound).
+        "step_s_lower_bound": max(t_comp, t_mem, t_coll),
+        "mfu_upper_bound": mf / PEAK_FLOPS / max(t_comp, t_mem, t_coll),
+    }
+
+
+def load(dirname: str, tag: str | None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if tag and r.get("tag") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def remedy(rec: dict, t: dict) -> str:
+    """One sentence: what would move the dominant term down (per cell)."""
+    shape = rec["shape"]
+    arch = rec["arch"]
+    coll = rec["per_device"].get("collectives", {})
+    top_coll = max(coll, key=coll.get) if coll else "none"
+    moe = "moe" in arch or "scout" in arch
+    if t["bottleneck"] == "collective":
+        if moe:
+            return ("dispatch/combine cross the expert-sharded axis -> "
+                    "moe_partition=tp keeps them shard-local (4.7x, SSPerf A)")
+        if top_coll == "all-reduce":
+            return ("TP activation all-reduces dominate: fewer tp shards or "
+                    "head-aligned sharding (attn_dp_only) removes them")
+        return f"dominant {top_coll}: overlap with compute or reshard operand"
+    if t["bottleneck"] == "memory":
+        if shape.startswith("decode") or shape == "long_500k":
+            return ("k=1 SpMV regime: weight+KV streaming floor; int8 KV or "
+                    "larger batch (SpMM amortization, Fig 9) raises MFU")
+        return ("attention/remat intermediates dominate HBM: triangular "
+                "schedule, bf16 p-tiles, or a fused Pallas attention kernel")
+    return "compute-bound: MXU-align tiles; sparse-FFN cuts FLOPs 2x"
+
+
+def render_md(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "bottleneck | 6ND/HLO | MFU bound | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — | — | — | "
+                f"SKIP: {r['reason']} |"
+            )
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — | — | — | "
+                f"ERROR: {r.get('error','')[:80]} |"
+            )
+            continue
+        t = terms(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {t['t_compute_s']:.3e} | {t['t_memory_s']:.3e} "
+            f"| {t['t_collective_s']:.3e} | **{t['bottleneck']}** "
+            f"| {t['useful_flops_ratio']:.2f} | {t['mfu_upper_bound']:.2%} "
+            f"| {remedy(r, t)} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--md", default=None)
+    args = ap.parse_args()
+    recs = load(args.dir, args.tag)
+    md = render_md(recs)
+    print(md)
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write(md + "\n")
+
+
+if __name__ == "__main__":
+    main()

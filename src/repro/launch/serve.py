@@ -1,0 +1,52 @@
+"""Serving launcher: batched decode over a reduced or full config.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-3-4b \
+      --reduced --requests 8 --slots 4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.models.lm import init_model
+from repro.runtime.server import BatchedServer, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    params, _ = init_model(cfg, 0)
+    srv = BatchedServer(cfg, params, batch_slots=args.slots, max_seq=args.max_seq)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=i,
+                prompt=rng.integers(0, cfg.vocab, args.prompt_len).astype(np.int32),
+                max_new=args.max_new)
+        for i in range(args.requests)
+    ]
+    for r in reqs:
+        srv.submit(r)
+    t0 = time.perf_counter()
+    srv.run_until_drained()
+    dt = time.perf_counter() - t0
+    done = sum(r.done for r in reqs)
+    toks = sum(len(r.out) for r in reqs)
+    print(f"served {done}/{len(reqs)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s, {srv.steps} decode steps, "
+          f"batch occupancy {toks / max(srv.steps, 1):.2f}/{args.slots})")
+
+
+if __name__ == "__main__":
+    main()

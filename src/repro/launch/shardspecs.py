@@ -1,0 +1,143 @@
+"""PartitionSpec builders for every dry-run input: params, optimizer state,
+batches, and decode state.
+
+``fit_spec`` is the safety net for uneven dims (GQA kv=8 over tp=16,
+batch=1 over dp=16 in long_500k): any mesh axis that does not divide the
+corresponding dim is dropped to replication, so ``lower()`` never trips on
+an unshardable annotation while everything shardable stays sharded.
+
+Decode caches shard their *slot* (sequence) dimension over 'model' — each
+chip holds a slice of the KV history, partial scores reduce via the softmax
+max/sum collectives GSPMD inserts.  This is flash-decoding-style context
+parallelism expressed as one annotation (DESIGN.md §7), and the multi-chip
+answer to the paper's "same x re-fetched by every core" observation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import MeshRules, default_rules
+from repro.models.lm import ModelConfig
+from .mesh import batch_axes
+
+__all__ = [
+    "fit_spec",
+    "fit_tree",
+    "param_shardings",
+    "opt_shardings",
+    "batch_shardings",
+    "decode_state_shardings",
+    "rules_for",
+]
+
+
+def rules_for(mesh) -> MeshRules:
+    return default_rules(multi_pod="pod" in mesh.axis_names)
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def fit_spec(mesh, spec: P, shape: tuple[int, ...]) -> P:
+    """Drop mesh axes that don't evenly divide their dim."""
+    out = []
+    for i, axes in enumerate(spec):
+        if i >= len(shape):
+            out.append(None)
+            continue
+        size = _axis_size(mesh, axes)
+        out.append(axes if size > 0 and shape[i] % size == 0 else None)
+    return P(*out)
+
+
+def fit_tree(mesh, spec_tree, shape_tree):
+    """NamedSharding tree from (spec tree, ShapeDtypeStruct tree)."""
+    is_spec = lambda x: isinstance(x, P)
+    return jax.tree.map(
+        lambda sp, sh: NamedSharding(mesh, fit_spec(mesh, sp, sh.shape)),
+        spec_tree,
+        shape_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def param_shardings(mesh, rules: MeshRules, axes_tree, shapes_tree):
+    spec_tree = rules.tree_specs(axes_tree)
+    return fit_tree(mesh, spec_tree, shapes_tree)
+
+
+def opt_shardings(mesh, rules, axes_tree, shapes_tree, opt_state_shapes):
+    ps_spec = rules.tree_specs(axes_tree)
+    out = {
+        "m": fit_tree(mesh, ps_spec, opt_state_shapes["m"]),
+        "v": fit_tree(mesh, ps_spec, opt_state_shapes["v"]),
+        "count": NamedSharding(mesh, P()),
+    }
+    if "master" in opt_state_shapes:
+        out["master"] = fit_tree(mesh, ps_spec, opt_state_shapes["master"])
+    return out
+
+
+def batch_shardings(mesh, cfg: ModelConfig, batch_shapes):
+    ba = batch_axes(mesh)
+    specs = {}
+    for key, sd in batch_shapes.items():
+        if key == "positions":  # (3, b, s)
+            specs[key] = P(None, ba, None)
+        else:  # leading batch dim
+            specs[key] = P(ba, *([None] * (len(sd.shape) - 1)))
+    return fit_tree(mesh, specs, batch_shapes)
+
+
+def _kv_cache_spec(ba):
+    # leading layer dim; k/v: (L, b, slots, kvh, hd) — slots over 'model'
+    return {
+        "k": P(None, ba, "model", None, None),
+        "v": P(None, ba, "model", None, None),
+        "positions": P(None, "model"),
+        "pos": P(None),
+    }
+
+
+def decode_state_shardings(mesh, cfg: ModelConfig, state_shapes):
+    ba = batch_axes(mesh)
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        specs = {"kv": _kv_cache_spec(ba)}
+    elif fam == "ssm":
+        specs = {
+            "rwkv": {
+                "tm_shift": P(None, ba, "model"),
+                "cm_shift": P(None, ba, "model"),
+                "wkv": P(None, ba, "model", None, None),
+            }
+        }
+    elif fam == "hybrid":
+        specs = {
+            "kv": _kv_cache_spec(ba),
+            "mamba": {
+                "conv": P(None, None, ba, None, "model"),
+                "ssd": P(None, None, ba, "model", None, None),
+            },
+        }
+    elif fam == "audio":
+        specs = {
+            "kv": _kv_cache_spec(ba),
+            "cross": {
+                "k": P(None, ba, None, None, None),
+                "v": P(None, ba, None, None, None),
+            },
+        }
+    else:
+        raise ValueError(fam)
+    return fit_tree(mesh, specs, state_shapes)

@@ -1,0 +1,192 @@
+"""Attention: chunked (flash-style) training/prefill path + cached decode.
+
+Pure-JAX blockwise attention with running max/sum renormalization — the
+memory-safe path for 32k-token prefill (a full 32k x 32k score tensor would
+be ~4 GB per head).  GQA grouping, causal masking, and sliding windows
+(h2o-danube) are handled by position arithmetic, so the same code serves
+full, causal, and banded attention.  The banded case is literally a banded
+sparse matrix product — the paper's structured-sparsity lesson applied to
+attention (see DESIGN.md §4).
+
+Decode uses a slot-position cache: ``positions[slot]`` records which absolute
+token a cache slot holds (-1 = empty).  A ring buffer (sliding-window decode,
+long_500k on danube) is the same structure with S = window; masking falls out
+of the position comparison, no special cases.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _divisor_chunk(total: int, chunk: int) -> int:
+    """Largest divisor of ``total`` that is <= ``chunk``."""
+    chunk = min(chunk, total)
+    while total % chunk:
+        chunk -= 1
+    return chunk
+
+__all__ = [
+    "flash_attention",
+    "decode_attention",
+    "init_kv_cache",
+    "update_kv_cache",
+]
+
+
+def flash_attention(
+    q: jax.Array,  # (b, sq, h, hd)
+    k: jax.Array,  # (b, skv, kvh, hd)
+    v: jax.Array,  # (b, skv, kvh, hd)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    skip_masked_blocks: bool = False,
+    p_dtype=None,
+) -> jax.Array:
+    """Blockwise softmax(QK^T)V with f32 accumulators.
+
+    ``skip_masked_blocks``: when causal, skip kv chunks entirely above the
+    diagonal (halves attention FLOPs at long seq) — the §Perf "triangular
+    schedule" variant; off in the paper-faithful baseline.
+
+    ``p_dtype``: optional reduced precision for the probability tiles fed to
+    the PV matmul (running max/sum statistics stay f32) — halves the biggest
+    attention intermediates; §Perf variant, None (f32) in the baseline.
+    """
+    b, sq, h, hd = q.shape
+    _, skv, kvh, _ = k.shape
+    assert h % kvh == 0, (h, kvh)
+    g = h // kvh
+    q_chunk = _divisor_chunk(sq, q_chunk)
+    kv_chunk = _divisor_chunk(skv, kv_chunk)
+    nq, nkv = sq // q_chunk, skv // kv_chunk
+    scale = hd ** -0.5
+
+    qr = q.reshape(b, nq, q_chunk, kvh, g, hd)
+    kr = k.reshape(b, nkv, kv_chunk, kvh, hd)
+    vr = v.reshape(b, nkv, kv_chunk, kvh, hd)
+
+    def q_block(iq, q_blk):
+        # q_blk: (b, q_chunk, kvh, g, hd)
+        q_pos = q_offset + iq * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ikv):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_index_in_dim(kr, ikv, 1, keepdims=False)
+            v_blk = jax.lax.dynamic_index_in_dim(vr, ikv, 1, keepdims=False)
+            kv_pos = ikv * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum(
+                "bqkgd,bckd->bkgqc",
+                q_blk.astype(jnp.float32),
+                k_blk.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            ) * scale
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= kv_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                mask &= q_pos[:, None] - kv_pos[None, :] < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)  # statistics always f32
+            pv = p if p_dtype is None else p.astype(p_dtype)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bckd->bkgqd",
+                pv,
+                v_blk.astype(pv.dtype),
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, q_chunk, hd), jnp.float32)
+        if skip_masked_blocks and causal and window is None:
+            # Triangular schedule: only kv chunks intersecting the causal cone.
+            n_needed = (q_offset + (iq + 1) * q_chunk + kv_chunk - 1) // kv_chunk
+            n_needed = jnp.minimum(n_needed, nkv)
+            (m, l, acc), _ = jax.lax.scan(
+                lambda c, i: jax.lax.cond(
+                    i < n_needed, lambda: kv_step(c, i), lambda: (c, None)
+                ),
+                (m0, l0, a0),
+                jnp.arange(nkv),
+            )
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0), jnp.arange(nkv)
+            )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4)  # (b, q_chunk, kvh, g, hd)
+
+    out = jax.lax.map(
+        lambda args: q_block(*args),
+        (jnp.arange(nq), qr.transpose(1, 0, 2, 3, 4, 5)),
+    )  # (nq, b, q_chunk, kvh, g, hd)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode path: slot-position KV cache
+# ---------------------------------------------------------------------------
+def init_kv_cache(
+    batch: int, slots: int, kv_heads: int, head_dim: int, dtype=jnp.bfloat16
+) -> dict[str, Any]:
+    """slots = max_seq for full caches, = window for ring (SWA) caches."""
+    return {
+        "k": jnp.zeros((batch, slots, kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, slots, kv_heads, head_dim), dtype),
+        "positions": jnp.full((slots,), -1, jnp.int32),
+        "pos": jnp.zeros((), jnp.int32),  # next absolute position
+    }
+
+
+def update_kv_cache(cache, k_new, v_new):
+    """Append one token (k/v_new: (b, 1, kvh, hd)); ring semantics via mod."""
+    slots = cache["k"].shape[1]
+    pos = cache["pos"]
+    slot = pos % slots
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1
+    )
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1
+    )
+    positions = cache["positions"].at[slot].set(pos)
+    return {"k": k, "v": v, "positions": positions, "pos": pos + 1}
+
+
+def decode_attention(
+    q: jax.Array,  # (b, 1, h, hd) — the new token's queries
+    cache: dict[str, Any],
+    *,
+    window: int | None = None,
+) -> jax.Array:
+    """Single-token attention against the cache (k=1 SpMV regime, cf. Fig 4)."""
+    b, one, h, hd = q.shape
+    kvh = cache["k"].shape[2]
+    g = h // kvh
+    scale = hd ** -0.5
+    pos = cache["pos"] - 1  # the query's absolute position (already appended)
+    qv = q.reshape(b, kvh, g, hd).astype(jnp.float32)
+    kc = cache["k"].astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qv, kc) * scale
+    valid = (cache["positions"] >= 0) & (cache["positions"] <= pos)
+    if window is not None:
+        valid &= pos - cache["positions"] < window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, cache["v"].astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)

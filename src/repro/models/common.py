@@ -1,0 +1,239 @@
+"""Shared model substrate: params-with-logical-axes, norms, RoPE, sharding.
+
+The module system is deliberately tiny and functional: ``init`` functions
+build pytrees of ``Px(value, axes)`` leaves (a value plus *logical* axis
+names); ``split_params`` separates them into a plain value tree (consumed by
+the apply functions) and an axes tree (consumed by the mesh rules to build
+``NamedSharding``s).  No flax/haiku dependency.
+
+Logical axes used across the zoo:
+  batch, seq               activations
+  embed                    d_model            -> fsdp ("data") on weights
+  heads_flat / kv_flat     flattened n_heads*head_dim   -> tp ("model")
+  mlp                      d_ff               -> tp ("model")
+  vocab                    vocabulary         -> tp ("model")
+  experts                  MoE expert count   -> ep ("model")
+  state, conv, lora, null  replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+PyTree = Any
+
+__all__ = [
+    "Px",
+    "split_params",
+    "MeshRules",
+    "DEFAULT_RULES",
+    "logical_to_spec",
+    "shard",
+    "dense_init",
+    "embed_init",
+    "zeros_init",
+    "ones_init",
+    "rms_norm",
+    "layer_norm",
+    "rope",
+    "apply_rope",
+    "apply_mrope",
+    "sinusoidal_positions",
+    "KeyGen",
+]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Px:
+    """A parameter leaf: value + logical axis names (one per dim)."""
+
+    value: jax.Array
+    axes: tuple[str | None, ...]
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+
+def split_params(tree: PyTree) -> tuple[PyTree, PyTree]:
+    """(Px tree) -> (plain value tree, logical-axes tree)."""
+    is_px = lambda x: isinstance(x, Px)
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_px)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_px)
+    return values, axes
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    """Logical axis -> mesh axis (or tuple of mesh axes) mapping."""
+
+    rules: dict[str, Any]
+
+    def spec(self, axes: tuple[str | None, ...]) -> PartitionSpec:
+        return PartitionSpec(*(self.rules.get(a) if a else None for a in axes))
+
+    def tree_specs(self, axes_tree: PyTree) -> PyTree:
+        is_axes = lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x
+        )
+        return jax.tree.map(self.spec, axes_tree, is_leaf=is_axes)
+
+
+def default_rules(multi_pod: bool) -> MeshRules:
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    return MeshRules(
+        rules={
+            "batch": batch_axes,
+            "embed": "data",  # fsdp
+            "heads_flat": "model",
+            "kv_flat": "model",
+            "mlp": "model",
+            "vocab": "model",
+            "experts": "model",
+            "act_model": "model",  # activation constraint on tp'd dims
+        }
+    )
+
+
+DEFAULT_RULES = default_rules(multi_pod=False)
+
+
+def logical_to_spec(rules: MeshRules, axes_tree: PyTree) -> PyTree:
+    return rules.tree_specs(axes_tree)
+
+
+def shard(x: jax.Array, *axes: str | None, rules: MeshRules | None = None):
+    """with_sharding_constraint by logical axes (no-op outside jit mesh)."""
+    rules = rules or _ACTIVE_RULES[0]
+    try:
+        return jax.lax.with_sharding_constraint(x, rules.spec(axes))
+    except Exception:
+        return x  # no mesh in scope (pure CPU unit tests)
+
+
+# Mutable holder so launch code can install multi-pod rules process-wide.
+_ACTIVE_RULES: list[MeshRules] = [DEFAULT_RULES]
+
+
+def set_active_rules(rules: MeshRules) -> None:
+    _ACTIVE_RULES[0] = rules
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+class KeyGen:
+    """Splittable PRNG key stream."""
+
+    def __init__(self, key: jax.Array | int):
+        self._key = jax.random.PRNGKey(key) if isinstance(key, int) else key
+
+    def __call__(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def dense_init(key, shape, axes, dtype=jnp.float32, scale: float | None = None):
+    """Truncated-normal fan-in init (the zoo's default for matmul weights)."""
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    value = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+    return Px((value * std).astype(dtype), axes)
+
+
+def embed_init(key, shape, axes, dtype=jnp.float32):
+    value = jax.random.normal(key, shape, jnp.float32) * 0.02
+    return Px(value.astype(dtype), axes)
+
+
+def zeros_init(shape, axes, dtype=jnp.float32):
+    return Px(jnp.zeros(shape, dtype), axes)
+
+
+def ones_init(shape, axes, dtype=jnp.float32):
+    return Px(jnp.ones(shape, dtype), axes)
+
+
+# ---------------------------------------------------------------------------
+# Norms (computed in f32, cast back)
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+def rope(positions: jax.Array, head_dim: int, theta: float = 10000.0):
+    """positions (...,) int -> (cos, sin) each (..., head_dim//2) f32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (b, s, h, d); cos/sin (b, s, d//2) -> rotated x (interleaved pairs)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions: jax.Array,  # (3, b, s) — t, h, w streams (Qwen2-VL)
+    sections: tuple[int, ...],  # half-dim split, e.g. (16, 24, 24)
+    theta: float = 10000.0,
+) -> jax.Array:
+    """Multimodal RoPE: different position streams rotate different sections."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # Build per-slot positions: slot i uses stream s(i) given by sections.
+    stream_of_slot = jnp.concatenate(
+        [jnp.full((w,), i, jnp.int32) for i, w in enumerate(sections)]
+    )  # (half,)
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32).transpose(1, 2, 0),  # (b, s, 3)
+        stream_of_slot[None, None, :].astype(jnp.int32) * jnp.ones(
+            x.shape[:2] + (half,), jnp.int32
+        ),
+        axis=-1,
+    )  # (b, s, half)
+    angles = pos * freqs
+    return apply_rope(x, jnp.cos(angles), jnp.sin(angles))
+
+
+def sinusoidal_positions(seq: int, dim: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (seq, dim) f32."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    angles = jnp.arange(seq)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)

@@ -1,0 +1,175 @@
+"""Feed-forward layers: dense SwiGLU / GELU, and the paper-integrated
+block-sparse FFN.
+
+The block-sparse FFN is the paper's kernels promoted to a framework feature.
+Two execution paths:
+
+* ``structured`` (default for distributed runs): the sparsity pattern is
+  constrained to G diagonal blocks + an optional banded halo on the hidden
+  dimension.  This is expressible as reshaped dense einsums, so GSPMD shards
+  it like any dense layer — the multi-chip story.  RCM-style clustering is
+  what *produces* such patterns from unstructured ones (core.reorder).
+* ``bcsr`` (single-chip / kernel path): arbitrary block patterns through
+  kernels.bcsr_spmm (Pallas; interpret-mode on CPU).  Used by the examples,
+  benchmarks and tests; the dry-run uses ``structured`` (see DESIGN.md §4).
+
+Both compute y = W2 @ act(W1 @ x) with W1/W2 sparse, W* block patterns built
+at init from a seeded mask.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import Px, dense_init, shard
+
+__all__ = ["swiglu_init", "swiglu_apply", "gelu_ffn_init", "gelu_ffn_apply",
+           "SparseFFNConfig", "sparse_ffn_init", "sparse_ffn_apply"]
+
+
+# ---------------------------------------------------------------------------
+# Dense SwiGLU (llama family) and GELU (whisper) FFNs
+# ---------------------------------------------------------------------------
+def swiglu_init(keygen, d_model: int, d_ff: int, dtype=jnp.float32):
+    return {
+        "wi_gate": dense_init(keygen(), (d_model, d_ff), ("embed", "mlp"), dtype),
+        "wi_up": dense_init(keygen(), (d_model, d_ff), ("embed", "mlp"), dtype),
+        "wo": dense_init(keygen(), (d_ff, d_model), ("mlp", "embed"), dtype),
+    }
+
+
+def swiglu_apply(p, x, gather_weights: bool = False):
+    def gw(w, model_dim):
+        if not gather_weights:
+            return w
+        axes = [None, None]
+        axes[model_dim] = "act_model"
+        return shard(w, *axes)
+
+    gate = jnp.einsum("bsd,df->bsf", x, gw(p["wi_gate"], 1))
+    up = jnp.einsum("bsd,df->bsf", x, gw(p["wi_up"], 1))
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    h = shard(h, "batch", None, "act_model")
+    return jnp.einsum("bsf,fd->bsd", h, gw(p["wo"], 0))
+
+
+def gelu_ffn_init(keygen, d_model: int, d_ff: int, dtype=jnp.float32):
+    return {
+        "wi": dense_init(keygen(), (d_model, d_ff), ("embed", "mlp"), dtype),
+        "bi": Px(jnp.zeros((d_ff,), dtype), ("mlp",)),
+        "wo": dense_init(keygen(), (d_ff, d_model), ("mlp", "embed"), dtype),
+        "bo": Px(jnp.zeros((d_model,), dtype), ("embed",)),
+    }
+
+
+def gelu_ffn_apply(p, x):
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"]) + p["bi"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"]) + p["bo"]
+
+
+# ---------------------------------------------------------------------------
+# Block-sparse FFN — the paper's technique as a first-class layer
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SparseFFNConfig:
+    kind: str = "structured"  # "structured" | "bcsr"
+    n_groups: int = 8  # diagonal blocks (structured)
+    band: int = 1  # banded halo width in groups (0 = pure block-diag)
+    density: float = 0.25  # bcsr: fraction of (bm, bk) blocks kept
+    block: tuple[int, int] = (128, 128)  # bcsr block shape
+    seed: int = 0
+
+
+def sparse_ffn_init(
+    keygen, d_model: int, d_ff: int, cfg: SparseFFNConfig, dtype=jnp.float32
+):
+    if cfg.kind == "structured":
+        G = cfg.n_groups
+        assert d_model % G == 0 and d_ff % G == 0, (d_model, d_ff, G)
+        dm_g, df_g = d_model // G, d_ff // G
+        width = 1 + 2 * cfg.band
+        # W1[g] maps input group g and its +-band neighbors to hidden group g.
+        return {
+            "w1": dense_init(
+                keygen(), (G, width * dm_g, df_g), (None, "embed", "mlp"), dtype
+            ),
+            "w2": dense_init(
+                keygen(), (G, df_g, width * dm_g), (None, "mlp", "embed"), dtype
+            ),
+        }
+    if cfg.kind == "bcsr":
+        bm, bk = cfg.block
+        gm, gk = d_ff // bm, d_model // bk
+        rng = np.random.default_rng(cfg.seed)
+        mask1 = rng.random((gm, gk)) < cfg.density
+        mask1[:, 0] |= ~mask1.any(axis=1)  # every block row keeps >= 1 block
+        r1, c1 = np.nonzero(mask1)
+        mask2 = rng.random((gk, gm)) < cfg.density
+        mask2[:, 0] |= ~mask2.any(axis=1)
+        r2, c2 = np.nonzero(mask2)
+        return {
+            "w1_blocks": dense_init(
+                keygen(), (len(r1), bm, bk), (None, None, None), dtype,
+                scale=(cfg.density * d_model) ** -0.5,
+            ),
+            "w1_rows": Px(jnp.asarray(r1, jnp.int32), (None,)),
+            "w1_cols": Px(jnp.asarray(c1, jnp.int32), (None,)),
+            "w2_blocks": dense_init(
+                keygen(), (len(r2), bk, bm), (None, None, None), dtype,
+                scale=(cfg.density * d_ff) ** -0.5,
+            ),
+            "w2_rows": Px(jnp.asarray(r2, jnp.int32), (None,)),
+            "w2_cols": Px(jnp.asarray(c2, jnp.int32), (None,)),
+        }
+    raise ValueError(cfg.kind)
+
+
+def _structured_gather(x_g: jax.Array, band: int) -> jax.Array:
+    """x_g (b, s, G, dm_g) -> (b, s, G, width*dm_g) with banded halo (rolls)."""
+    parts = [jnp.roll(x_g, shift=-o, axis=2) for o in range(-band, band + 1)]
+    return jnp.concatenate(parts, axis=-1)
+
+
+def sparse_ffn_apply(p, x, cfg: SparseFFNConfig, d_ff: int):
+    b, s, d_model = x.shape
+    if cfg.kind == "structured":
+        G, wdm, df_g = p["w1"].shape
+        x_g = x.reshape(b, s, G, d_model // G)
+        xin = _structured_gather(x_g, cfg.band)
+        h = jnp.einsum("bsge,gef->bsgf", xin, p["w1"])
+        h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype)
+        y = jnp.einsum("bsgf,gfe->bsge", h, p["w2"])
+        # Scatter-add the halo back: inverse of the roll-concat gather.
+        width = 1 + 2 * cfg.band
+        dm_g = d_model // G
+        y_parts = jnp.split(y, width, axis=-1)
+        out = jnp.zeros_like(x_g)
+        for i, o in enumerate(range(-cfg.band, cfg.band + 1)):
+            out = out + jnp.roll(y_parts[i], shift=o, axis=2)
+        return out.reshape(b, s, d_model)
+    if cfg.kind == "bcsr":
+        from repro.kernels.bcsr_spmm import bcsr_spmm_pallas
+
+        bm, bk = cfg.block
+        xt = x.reshape(b * s, d_model).T  # (d_model, T) — spmm wants A @ X
+        interpret = jax.default_backend() == "cpu"
+        h = bcsr_spmm_pallas(
+            p["w1_rows"], p["w1_cols"], p["w1_blocks"],
+            xt.reshape(d_model // bk, bk, b * s),
+            n_block_rows=d_ff // bm,
+            interpret=interpret,
+        )  # (d_ff//bm, bm, T)
+        h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype)
+        y = bcsr_spmm_pallas(
+            p["w2_rows"], p["w2_cols"], p["w2_blocks"],
+            h.reshape(d_ff // bm, bm, b * s),
+            n_block_rows=d_model // bk,
+            interpret=interpret,
+        )  # (d_model//bk, bk, T)
+        return y.reshape(d_model, b * s).T.reshape(b, s, d_model)
+    raise ValueError(cfg.kind)

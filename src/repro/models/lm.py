@@ -1,0 +1,816 @@
+"""The unified model: one composable block stack covering all ten assigned
+architectures (dense GQA / SWA / QKV-bias, MoE, RWKV6, Mamba2 hybrid,
+Whisper enc-dec, VLM M-RoPE) plus the paper-integrated block-sparse FFN.
+
+Everything stacks through ``lax.scan`` over layers (compile time stays flat
+in depth — essential for llama3-405b's 126 layers under 512-way SPMD), with
+optional ``jax.checkpoint`` remat around the block body.
+
+Param pytrees carry logical axis names (models.common.Px); ``init_model``
+returns (values, axes) so launch code can build NamedShardings from mesh
+rules without a parallel spec tree drifting out of sync.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import ffn as ffn_mod
+from . import mamba2 as m2
+from . import moe as moe_mod
+from . import rwkv6 as rw
+from .common import (
+    KeyGen,
+    Px,
+    apply_mrope,
+    apply_rope,
+    dense_init,
+    embed_init,
+    layer_norm,
+    rms_norm,
+    rope,
+    shard,
+    sinusoidal_positions,
+    split_params,
+)
+from .ffn import SparseFFNConfig
+from .moe import MoEConfig
+
+__all__ = ["ModelConfig", "init_model", "loss_fn", "prefill", "decode_step",
+           "init_decode_state", "param_count"]
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str  # dense | ssm | moe | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    # attention
+    attn_bias: bool = False
+    sliding_window: int | None = None
+    rope_theta: float = 10000.0
+    mrope_sections: tuple[int, ...] | None = None
+    attn_chunk: int = 1024
+    skip_masked_blocks: bool = False  # §Perf triangular-schedule variant
+    attn_p_bf16: bool = False  # §Perf: bf16 probability tiles in flash attn
+    # moe
+    moe: MoEConfig | None = None
+    moe_partition: str = "ep"  # "ep" baseline | "tp" hillclimb variant
+    # ssm
+    ssm_kind: str | None = None  # rwkv6 | mamba2
+    ssm_state: int = 64
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128
+    # hybrid (zamba2): shared attn block every `hybrid_period` ssm layers
+    hybrid_period: int = 0
+    lora_rank: int = 0
+    # enc-dec (whisper)
+    enc_layers: int = 0
+    enc_frames: int = 1500
+    # vlm
+    n_vision_tokens: int = 0
+    # misc
+    norm: str = "rmsnorm"  # layernorm for whisper
+    act: str = "swiglu"  # gelu for whisper
+    dtype: Any = jnp.bfloat16
+    remat: str = "full"  # none | full
+    embed_onehot: bool = False  # §Perf variant: one-hot matmul embedding
+    attn_dp_only: bool = False  # §Perf: keep attention data-parallel when
+    # head counts don't divide tp (llama4: 40q/8kv vs tp=16) — avoids GSPMD
+    # shredding heads and all-reducing every score tile.
+    fsdp_gather_weights: bool = False  # §Perf: gather FSDP weight shards at
+    # use (all-gather small weights over 'data') instead of letting GSPMD
+    # all-reduce large activations over 'data' — classic FSDP semantics.
+    sparse_ffn: SparseFFNConfig | None = None
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        return -(-self.vocab // 256) * 256
+
+    @property
+    def qkv_dims(self) -> tuple[int, int]:
+        return self.n_heads * self.hd, self.n_kv_heads * self.hd
+
+
+# ---------------------------------------------------------------------------
+# Layer init
+# ---------------------------------------------------------------------------
+def _norm_init(cfg, name_dim):
+    if cfg.norm == "layernorm":
+        return {
+            "g": Px(jnp.ones((name_dim,), cfg.dtype), ("embed",)),
+            "b": Px(jnp.zeros((name_dim,), cfg.dtype), ("embed",)),
+        }
+    return {"g": Px(jnp.ones((name_dim,), cfg.dtype), ("embed",))}
+
+
+def _apply_norm(cfg, p, x):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["g"], p["b"])
+    return rms_norm(x, p["g"])
+
+
+def _attn_init(kg, cfg: ModelConfig, cross: bool = False):
+    d, (qd, kvd) = cfg.d_model, cfg.qkv_dims
+    p = {
+        "wq": dense_init(kg(), (d, qd), ("embed", "heads_flat"), cfg.dtype),
+        "wk": dense_init(kg(), (d, kvd), ("embed", "kv_flat"), cfg.dtype),
+        "wv": dense_init(kg(), (d, kvd), ("embed", "kv_flat"), cfg.dtype),
+        "wo": dense_init(kg(), (qd, d), ("heads_flat", "embed"), cfg.dtype),
+    }
+    if cfg.attn_bias:
+        p["bq"] = Px(jnp.zeros((qd,), cfg.dtype), ("heads_flat",))
+        p["bk"] = Px(jnp.zeros((kvd,), cfg.dtype), ("kv_flat",))
+        p["bv"] = Px(jnp.zeros((kvd,), cfg.dtype), ("kv_flat",))
+    return p
+
+
+def _ffn_init(kg, cfg: ModelConfig):
+    if cfg.moe is not None:
+        return moe_mod.moe_init(kg, cfg.d_model, cfg.moe, cfg.dtype,
+                                partition=cfg.moe_partition)
+    if cfg.sparse_ffn is not None:
+        return ffn_mod.sparse_ffn_init(kg, cfg.d_model, cfg.d_ff, cfg.sparse_ffn, cfg.dtype)
+    if cfg.act == "gelu":
+        return ffn_mod.gelu_ffn_init(kg, cfg.d_model, cfg.d_ff, cfg.dtype)
+    return ffn_mod.swiglu_init(kg, cfg.d_model, cfg.d_ff, cfg.dtype)
+
+
+def _block_init(kg, cfg: ModelConfig):
+    """One transformer block (dense/moe/vlm families)."""
+    return {
+        "ln1": _norm_init(cfg, cfg.d_model),
+        "attn": _attn_init(kg, cfg),
+        "ln2": _norm_init(cfg, cfg.d_model),
+        "ffn": _ffn_init(kg, cfg),
+    }
+
+
+def _stack(init_one, kg: KeyGen, n: int):
+    """Stack n layers' params along a leading 'layers' axis (scan-ready)."""
+    keys = jnp.stack([kg() for _ in range(n)])
+    stacked = jax.vmap(lambda k: init_one(KeyGen(k)))(keys)
+    is_px = lambda x: isinstance(x, Px)
+    return jax.tree.map(
+        lambda p: Px(p.value, ("layers",) + p.axes), stacked, is_leaf=is_px
+    )
+
+
+def init_model(cfg: ModelConfig, seed: int = 0):
+    """Returns (params values tree, logical-axes tree)."""
+    kg = KeyGen(seed)
+    V, d = cfg.vocab_padded, cfg.d_model
+    params: dict[str, Any] = {
+        "embed": embed_init(kg(), (V, d), ("vocab", "embed"), cfg.dtype),
+        "unembed": dense_init(kg(), (d, V), ("embed", "vocab"), cfg.dtype),
+        "ln_f": _norm_init(cfg, d),
+    }
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        params["blocks"] = _stack(lambda k: _block_init(k, cfg), kg, cfg.n_layers)
+    elif fam == "ssm" and cfg.ssm_kind == "rwkv6":
+        params["blocks"] = _stack(
+            lambda k: rw.rwkv6_init(k, d, cfg.d_ff, cfg.ssm_head_dim, cfg.dtype),
+            kg,
+            cfg.n_layers,
+        )
+    elif fam == "hybrid":
+        period = cfg.hybrid_period
+        n_super = cfg.n_layers // period
+        params["blocks"] = _stack(
+            lambda k: _stack(
+                lambda k2: {
+                    "ln": _norm_init(cfg, d),
+                    "mamba": m2.mamba2_init(
+                        k2, d, cfg.ssm_state, cfg.ssm_head_dim, dtype=cfg.dtype
+                    ),
+                },
+                k,
+                period,
+            ),
+            kg,
+            n_super,
+        )
+        # shared transformer block + per-invocation LoRA on q projection
+        params["shared"] = _block_init(kg, cfg)
+        if cfg.lora_rank:
+            qd = cfg.qkv_dims[0]
+            params["lora_a"] = dense_init(
+                kg(), (n_super, d, cfg.lora_rank), (None, "embed", None), cfg.dtype
+            )
+            params["lora_b"] = Px(
+                jnp.zeros((n_super, cfg.lora_rank, qd), cfg.dtype),
+                (None, None, "heads_flat"),
+            )
+    elif fam == "audio":
+        params["enc_blocks"] = _stack(
+            lambda k: _block_init(k, cfg), kg, cfg.enc_layers
+        )
+        params["dec_blocks"] = _stack(
+            lambda k: {
+                "ln1": _norm_init(cfg, d),
+                "attn": _attn_init(kg=k, cfg=cfg),
+                "lnx": _norm_init(cfg, d),
+                "xattn": _attn_init(kg=k, cfg=cfg, cross=True),
+                "ln2": _norm_init(cfg, d),
+                "ffn": _ffn_init(k, cfg),
+            },
+            kg,
+            cfg.n_layers,
+        )
+        params["ln_enc"] = _norm_init(cfg, d)
+    else:
+        raise ValueError(f"unknown family {fam} / ssm_kind {cfg.ssm_kind}")
+    return split_params(params)
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def abstract_model(cfg: ModelConfig, seed: int = 0):
+    """(ShapeDtypeStruct tree, axes tree) without allocating any parameter —
+    the dry-run path for 405B-parameter configs."""
+    box = {}
+
+    def f():
+        vals, axes = init_model(cfg, seed)
+        box["axes"] = axes  # static python data captured during tracing
+        return vals
+
+    shapes = jax.eval_shape(f)
+    return shapes, box["axes"]
+
+
+# ---------------------------------------------------------------------------
+# Attention sub-block (shared by all transformer families)
+# ---------------------------------------------------------------------------
+def _gather_w(cfg, w, model_dim: int):
+    """FSDP: unshard the 'data' (fsdp) axis of a weight at use."""
+    if not cfg.fsdp_gather_weights:
+        return w
+    axes = [None, None]
+    axes[model_dim] = "act_model"
+    return shard(w, *axes)
+
+
+def _project_qkv(cfg, p, x, lora=None):
+    qd, kvd = cfg.qkv_dims
+    q = jnp.einsum("bsd,de->bse", x, _gather_w(cfg, p["wq"], 1))
+    if lora is not None:  # zamba2 per-invocation LoRA
+        la, lb = lora
+        q = q + jnp.einsum("bsd,dr,re->bse", x, la, lb)
+    k = jnp.einsum("bsd,de->bse", x, _gather_w(cfg, p["wk"], 1))
+    v = jnp.einsum("bsd,de->bse", x, _gather_w(cfg, p["wv"], 1))
+    if cfg.attn_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    b, s, _ = x.shape
+    if cfg.attn_dp_only:
+        q = shard(q, "batch", None, None).reshape(b, s, cfg.n_heads, cfg.hd)
+        k = shard(k, "batch", None, None).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+        v = shard(v, "batch", None, None).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+        q = shard(q, "batch", None, None, None)
+        k = shard(k, "batch", None, None, None)
+        v = shard(v, "batch", None, None, None)
+    else:
+        q = shard(q, "batch", None, "act_model").reshape(b, s, cfg.n_heads, cfg.hd)
+        k = shard(k, "batch", None, "act_model").reshape(b, s, cfg.n_kv_heads, cfg.hd)
+        v = shard(v, "batch", None, "act_model").reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    return q, k, v
+
+
+def _attn_seq(cfg, p, x, positions, *, causal=True, kv=None, lora=None,
+              return_kv=False):
+    """Full-sequence attention. positions: (b, s) int or (3, b, s) for mrope.
+    kv: optional external (k, v) for cross-attention."""
+    q, k, v = _project_qkv(cfg, p, x, lora)
+    if kv is not None:
+        k, v = kv  # cross-attn: keys/values from the encoder
+    elif cfg.mrope_sections is not None:
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    elif cfg.family != "audio":  # whisper uses absolute positions only
+        cos, sin = rope(positions, cfg.hd, cfg.rope_theta)
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    out = attn.flash_attention(
+        q, k, v,
+        causal=causal,
+        window=cfg.sliding_window,
+        q_chunk=cfg.attn_chunk,
+        kv_chunk=cfg.attn_chunk,
+        skip_masked_blocks=cfg.skip_masked_blocks,
+        p_dtype=jnp.bfloat16 if cfg.attn_p_bf16 else None,
+    )
+    b, s = x.shape[:2]
+    out = out.reshape(b, s, cfg.qkv_dims[0])
+    y = jnp.einsum("bse,ed->bsd", out, _gather_w(cfg, p["wo"], 0))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def _ffn_apply(cfg, p, x):
+    """Returns (y, aux_loss)."""
+    if cfg.moe is not None:
+        return moe_mod.moe_apply(p, x, cfg.moe, partition=cfg.moe_partition)
+    if cfg.sparse_ffn is not None:
+        return ffn_mod.sparse_ffn_apply(p, x, cfg.sparse_ffn, cfg.d_ff), 0.0
+    if cfg.act == "gelu":
+        return ffn_mod.gelu_ffn_apply(p, x), 0.0
+    return ffn_mod.swiglu_apply(p, x, cfg.fsdp_gather_weights), 0.0
+
+
+def _transformer_block(cfg, p, x, positions, lora=None):
+    h = _attn_seq(cfg, p["attn"], _apply_norm(cfg, p["ln1"], x), positions, lora=lora)
+    x = x + h
+    f, aux = _ffn_apply(cfg, p["ffn"], _apply_norm(cfg, p["ln2"], x))
+    return x + f, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill logits)
+# ---------------------------------------------------------------------------
+def _embed_tokens(cfg, params, tokens):
+    if cfg.embed_onehot:
+        onehot = jax.nn.one_hot(tokens, cfg.vocab_padded, dtype=cfg.dtype)
+        h = jnp.einsum("bsv,vd->bsd", onehot, params["embed"])
+    else:
+        h = params["embed"][tokens]
+    return shard(h, "batch", None, None)
+
+
+def _maybe_remat(cfg, fn):
+    return jax.checkpoint(fn) if cfg.remat == "full" else fn
+
+
+def forward(cfg: ModelConfig, params, batch) -> jax.Array:
+    """Token logits for train/prefill.  batch keys by family:
+    tokens/labels; audio adds frames (b, F, d); vlm adds vision_embeds
+    (b, n_vis, d) and positions (3, b, s)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = _embed_tokens(cfg, params, tokens)
+    if cfg.family == "vlm" and cfg.n_vision_tokens:
+        # early fusion: precomputed patch embeddings replace the first
+        # n_vision_tokens slots (the vision tower itself is a stub, per spec)
+        vis = batch["vision_embeds"].astype(h.dtype)
+        h = jnp.concatenate([vis, h[:, cfg.n_vision_tokens :]], axis=1)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        block = _maybe_remat(
+            cfg, lambda p, x: _transformer_block(cfg, p, x, positions)
+        )
+
+        def body(carry, p):
+            x, aux = carry
+            x, a = block(p, x)
+            return (x, aux + a), None
+
+        (h, aux), _ = jax.lax.scan(
+            body, (h, jnp.zeros((), jnp.float32)), params["blocks"]
+        )
+    elif fam == "ssm":
+        states = rw.rwkv6_init_state(b, cfg.d_model, cfg.ssm_head_dim)
+
+        def body(x, p):
+            y, _ = _maybe_remat(cfg, lambda pp, xx: rw.rwkv6_apply_seq(
+                pp, xx, states, cfg.ssm_head_dim
+            ))(p, x)
+            return y, None
+
+        h, _ = jax.lax.scan(body, h, params["blocks"])
+        aux = jnp.zeros((), jnp.float32)
+    elif fam == "hybrid":
+        n_super = cfg.n_layers // cfg.hybrid_period
+        st = m2.mamba2_init_state(b, cfg.d_model, cfg.ssm_state, cfg.ssm_head_dim)
+
+        def mamba_layer(x, p):
+            y, _ = m2.mamba2_apply_seq(
+                p["mamba"], _apply_norm(cfg, p["ln"], x), st,
+                cfg.ssm_state, cfg.ssm_head_dim, chunk=cfg.ssm_chunk,
+            )
+            return x + y, None
+
+        def super_block(carry, sp):
+            x, aux = carry
+            p_layers, lora = sp
+            la = (lora["a"], lora["b"]) if cfg.lora_rank else None
+            x, a = _maybe_remat(
+                cfg,
+                lambda ps, xx: _transformer_block(cfg, ps, xx, positions, lora=la),
+            )(params["shared"], x)
+            x, _ = jax.lax.scan(
+                lambda xx, p: _maybe_remat(cfg, mamba_layer)(xx, p), x, p_layers
+            )
+            return (x, aux + a), None
+
+        lora_xs = (
+            {"a": params["lora_a"], "b": params["lora_b"]}
+            if cfg.lora_rank
+            else {"a": jnp.zeros((n_super,)), "b": jnp.zeros((n_super,))}
+        )
+        (h, aux), _ = jax.lax.scan(
+            super_block, (h, jnp.zeros((), jnp.float32)), (params["blocks"], lora_xs)
+        )
+    elif fam == "audio":
+        h_enc = _encode_audio(cfg, params, batch["frames"])
+        pos_dec = positions
+        h = h + sinusoidal_positions(s, cfg.d_model)[None].astype(h.dtype)
+
+        def body(carry, p):
+            x, aux = carry
+
+            def blk(p, x):
+                y = _attn_seq(cfg, p["attn"], _apply_norm(cfg, p["ln1"], x), pos_dec)
+                x = x + y
+                hx = _attn_seq(
+                    cfg, p["xattn"], _apply_norm(cfg, p["lnx"], x), pos_dec,
+                    causal=False, kv=_cross_kv(cfg, p["xattn"], h_enc),
+                )
+                x = x + hx
+                f, a = _ffn_apply(cfg, p["ffn"], _apply_norm(cfg, p["ln2"], x))
+                return x + f, a
+
+            x, a = _maybe_remat(cfg, blk)(p, x)
+            return (x, aux + a), None
+
+        (h, aux), _ = jax.lax.scan(
+            body, (h, jnp.zeros((), jnp.float32)), params["dec_blocks"]
+        )
+    else:
+        raise ValueError(fam)
+
+    h = _apply_norm(cfg, params["ln_f"], h)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["unembed"])
+    logits = shard(logits, "batch", None, "act_model")
+    return logits, aux
+
+
+def _cross_kv(cfg, p, h_enc):
+    b, f, _ = h_enc.shape
+    k = jnp.einsum("bsd,de->bse", h_enc, p["wk"]).reshape(b, f, cfg.n_kv_heads, cfg.hd)
+    v = jnp.einsum("bsd,de->bse", h_enc, p["wv"]).reshape(b, f, cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+def _encode_audio(cfg, params, frames):
+    """Whisper encoder over precomputed frame embeddings (conv stub)."""
+    b, f, _ = frames.shape
+    h = frames.astype(cfg.dtype) + sinusoidal_positions(f, cfg.d_model)[None].astype(cfg.dtype)
+    pos = jnp.broadcast_to(jnp.arange(f)[None, :], (b, f))
+
+    def body(x, p):
+        y = _attn_seq(cfg, p["attn"], _apply_norm(cfg, p["ln1"], x), pos, causal=False)
+        x = x + y
+        ff, _ = _ffn_apply(cfg, p["ffn"], _apply_norm(cfg, p["ln2"], x))
+        return x + ff, None
+
+    h, _ = jax.lax.scan(body, h, params["enc_blocks"])
+    return _apply_norm(cfg, params["ln_enc"], h)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+def loss_fn(cfg: ModelConfig, params, batch, z_loss: float = 1e-4):
+    logits, aux = forward(cfg, params, batch)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    # mask padded vocab ids out of the softmax
+    if cfg.vocab_padded != cfg.vocab:
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = lse - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = (nll * mask).sum() / denom
+    zl = z_loss * ((lse * mask) ** 2).sum() / denom
+    total = ce + zl + aux
+    return total, {"ce": ce, "z_loss": zl, "aux": aux, "tokens": denom}
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+# ---------------------------------------------------------------------------
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int):
+    """Per-layer stacked decode state (KV caches and/or SSM states)."""
+    slots = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+    mk_cache = lambda n: jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n,) + x.shape),
+        attn.init_kv_cache(batch, slots, cfg.n_kv_heads, cfg.hd, cfg.dtype),
+    )
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return {"kv": mk_cache(cfg.n_layers)}
+    if fam == "ssm":
+        st = rw.rwkv6_init_state(batch, cfg.d_model, cfg.ssm_head_dim)
+        return {"rwkv": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), st
+        )}
+    if fam == "hybrid":
+        n_super = cfg.n_layers // cfg.hybrid_period
+        st = m2.mamba2_init_state(batch, cfg.d_model, cfg.ssm_state, cfg.ssm_head_dim)
+        return {
+            "kv": mk_cache(n_super),
+            "mamba": jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x, (n_super, cfg.hybrid_period) + x.shape
+                ),
+                st,
+            ),
+        }
+    if fam == "audio":
+        return {
+            "kv": mk_cache(cfg.n_layers),
+            # encoder cross-attention K/V, overwritten by prefill
+            "cross": {
+                "k": jnp.zeros(
+                    (cfg.n_layers, batch, cfg.enc_frames, cfg.n_kv_heads, cfg.hd),
+                    cfg.dtype,
+                ),
+                "v": jnp.zeros(
+                    (cfg.n_layers, batch, cfg.enc_frames, cfg.n_kv_heads, cfg.hd),
+                    cfg.dtype,
+                ),
+            },
+        }
+    raise ValueError(fam)
+
+
+def decode_step(cfg: ModelConfig, params, state, tokens):
+    """One new token for every sequence. tokens (b, 1). Returns (state, logits)."""
+    b = tokens.shape[0]
+    h = _embed_tokens(cfg, params, tokens)
+    fam = cfg.family
+
+    def attn_decode(p, x, cache, lora=None, cross_kv=None):
+        """x (b, 1, d) -> (y, cache'). Appends K/V then attends."""
+        q, k, v = _project_qkv(cfg, p, x, lora)
+        pos = cache["pos"]
+        posb = jnp.broadcast_to(pos[None, None], (b, 1))
+        if cfg.mrope_sections is not None:
+            q = apply_mrope(q, jnp.broadcast_to(pos, (3, b, 1)), cfg.mrope_sections, cfg.rope_theta)
+            k = apply_mrope(k, jnp.broadcast_to(pos, (3, b, 1)), cfg.mrope_sections, cfg.rope_theta)
+        elif cfg.family != "audio":
+            cos, sin = rope(posb, cfg.hd, cfg.rope_theta)
+            q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+        cache = attn.update_kv_cache(cache, k, v)
+        out = attn.decode_attention(q, cache, window=cfg.sliding_window)
+        y = jnp.einsum("bse,ed->bsd", out.reshape(b, 1, -1), p["wo"])
+        return y, cache
+
+    if fam in ("dense", "moe", "vlm"):
+        def body(x, xs):
+            p, cache = xs
+            y, cache = attn_decode(p["attn"], _apply_norm(cfg, p["ln1"], x), cache)
+            x = x + y
+            f, _ = _ffn_apply(cfg, p["ffn"], _apply_norm(cfg, p["ln2"], x))
+            return x + f, cache
+
+        h, kv = jax.lax.scan(body, h, (params["blocks"], state["kv"]))
+        state = {"kv": kv}
+    elif fam == "ssm":
+        def body(x, xs):
+            p, st = xs
+            y, st = rw.rwkv6_apply_step(p, x, st, cfg.ssm_head_dim)
+            return y, st
+
+        h, rst = jax.lax.scan(body, h, (params["blocks"], state["rwkv"]))
+        state = {"rwkv": rst}
+    elif fam == "hybrid":
+        def super_body(x, xs):
+            p_layers, lora, cache, mst = xs
+            la = (lora["a"], lora["b"]) if cfg.lora_rank else None
+            y, cache = attn_decode(
+                params["shared"]["attn"],
+                _apply_norm(cfg, params["shared"]["ln1"], x),
+                cache, lora=la,
+            )
+            x = x + y
+            f, _ = _ffn_apply(
+                cfg, params["shared"]["ffn"],
+                _apply_norm(cfg, params["shared"]["ln2"], x),
+            )
+            x = x + f
+
+            def mamba_body(xx, xs2):
+                p, st = xs2
+                y2, st = m2.mamba2_apply_step(
+                    p["mamba"], _apply_norm(cfg, p["ln"], xx), st,
+                    cfg.ssm_state, cfg.ssm_head_dim,
+                )
+                return xx + y2, st
+
+            x, mst = jax.lax.scan(mamba_body, x, (p_layers, mst))
+            return x, (cache, mst)
+
+        n_super = cfg.n_layers // cfg.hybrid_period
+        lora_xs = (
+            {"a": params["lora_a"], "b": params["lora_b"]}
+            if cfg.lora_rank
+            else {"a": jnp.zeros((n_super,)), "b": jnp.zeros((n_super,))}
+        )
+        h, (kv, mst) = jax.lax.scan(
+            super_body, h, (params["blocks"], lora_xs, state["kv"], state["mamba"])
+        )
+        state = {"kv": kv, "mamba": mst}
+    elif fam == "audio":
+        cross = state["cross"]
+        # absolute sinusoidal position of the new token
+        pos0 = state["kv"]["pos"][0]
+        half = cfg.d_model // 2
+        freqs = jnp.exp(
+            -jnp.log(10000.0) * jnp.arange(half) / max(half - 1, 1)
+        )
+        ang = pos0.astype(jnp.float32) * freqs
+        h = h + jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None].astype(h.dtype)
+
+        def body(x, xs):
+            p, cache, ckv = xs
+            y, cache = attn_decode(p["attn"], _apply_norm(cfg, p["ln1"], x), cache)
+            x = x + y
+            # cross-attention against the (precomputed) encoder K/V
+            q, _, _ = _project_qkv(cfg, p["xattn"], _apply_norm(cfg, p["lnx"], x))
+            o = attn.flash_attention(
+                q, ckv["k"], ckv["v"], causal=False,
+                q_chunk=1, kv_chunk=min(cfg.attn_chunk, ckv["k"].shape[1]),
+            )
+            x = x + jnp.einsum(
+                "bse,ed->bsd", o.reshape(b, 1, -1), p["xattn"]["wo"]
+            )
+            f, _ = _ffn_apply(cfg, p["ffn"], _apply_norm(cfg, p["ln2"], x))
+            return x + f, cache
+
+        h, kv = jax.lax.scan(body, h, (params["dec_blocks"], state["kv"], cross))
+        state = {"kv": kv, "cross": cross}
+    else:
+        raise ValueError(fam)
+
+    h = _apply_norm(cfg, params["ln_f"], h)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["unembed"])
+    return state, logits
+
+
+def prefill(cfg: ModelConfig, params, batch, max_seq: int):
+    """Run the full prompt once, returning (decode_state at position s,
+    last-token logits).  One forward pass: the per-layer scan captures K/V
+    caches (transformer families) or carried recurrent state (SSM/hybrid)
+    as scan outputs."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    fam = cfg.family
+    if fam == "ssm":
+        h = _embed_tokens(cfg, params, tokens)
+        st0 = rw.rwkv6_init_state(b, cfg.d_model, cfg.ssm_head_dim)
+
+        def body(x, p):
+            y, st = rw.rwkv6_apply_seq(p, x, st0, cfg.ssm_head_dim)
+            return y, st
+
+        h, rst = jax.lax.scan(body, h, params["blocks"])
+        state = {"rwkv": rst}
+    else:
+        h, state = _prefill_caches(cfg, params, batch, max_seq)
+    h = _apply_norm(cfg, params["ln_f"], h[:, -1:])
+    logits = jnp.einsum("bsd,dv->bsv", h, params["unembed"])
+    return state, logits[:, -1]
+
+
+def _prefill_caches(cfg, params, batch, max_seq):
+    """One forward pass that also captures per-layer K/V caches.
+
+    Returns (h_final (b, s, d), decode_state)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = _embed_tokens(cfg, params, tokens)
+    if cfg.family == "vlm" and cfg.n_vision_tokens:
+        vis = batch["vision_embeds"].astype(h.dtype)
+        h = jnp.concatenate([vis, h[:, cfg.n_vision_tokens :]], axis=1)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    slots = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+
+    def capture(p_attn, x, lora=None):
+        q, k, v = _project_qkv(cfg, p_attn, x, lora)
+        if cfg.mrope_sections is not None:
+            q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+            k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+        elif cfg.family != "audio":
+            cos, sin = rope(positions, cfg.hd, cfg.rope_theta)
+            q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+        out = attn.flash_attention(
+            q, k, v, causal=True, window=cfg.sliding_window,
+            q_chunk=min(cfg.attn_chunk, s), kv_chunk=min(cfg.attn_chunk, s),
+        )
+        y = jnp.einsum("bse,ed->bsd", out.reshape(b, s, -1), p_attn["wo"])
+        # pack trailing `slots` tokens into the cache (ring semantics)
+        take = min(slots, s)
+        kc = jnp.zeros((b, slots, cfg.n_kv_heads, cfg.hd), cfg.dtype)
+        vc = jnp.zeros_like(kc)
+        sl_start = (s - take) % max(slots, 1)
+        # place tokens so slot = pos % slots
+        pos_ids = jnp.arange(s - take, s)
+        slot_ids = pos_ids % slots
+        kc = kc.at[:, slot_ids].set(k[:, -take:].astype(cfg.dtype))
+        vc = vc.at[:, slot_ids].set(v[:, -take:].astype(cfg.dtype))
+        positions_slots = jnp.full((slots,), -1, jnp.int32).at[slot_ids].set(pos_ids)
+        cache = {"k": kc, "v": vc, "positions": positions_slots,
+                 "pos": jnp.asarray(s, jnp.int32)}
+        return y, cache
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        def body(carry, p):
+            x = carry
+            y, cache = capture(p["attn"], _apply_norm(cfg, p["ln1"], x))
+            x = x + y
+            f, _ = _ffn_apply(cfg, p["ffn"], _apply_norm(cfg, p["ln2"], x))
+            return x + f, cache
+
+        h, kv = jax.lax.scan(body, h, params["blocks"])
+        return h, {"kv": kv}
+    if fam == "hybrid":
+        n_super = cfg.n_layers // cfg.hybrid_period
+        lora_xs = (
+            {"a": params["lora_a"], "b": params["lora_b"]}
+            if cfg.lora_rank
+            else {"a": jnp.zeros((n_super,)), "b": jnp.zeros((n_super,))}
+        )
+        st0 = m2.mamba2_init_state(b, cfg.d_model, cfg.ssm_state, cfg.ssm_head_dim)
+
+        def body(carry, xs):
+            x = carry
+            p_layers, lora = xs
+            la = (lora["a"], lora["b"]) if cfg.lora_rank else None
+            y, cache = capture(
+                params["shared"]["attn"],
+                _apply_norm(cfg, params["shared"]["ln1"], x), lora=la,
+            )
+            x = x + y
+            f, _ = _ffn_apply(
+                cfg, params["shared"]["ffn"],
+                _apply_norm(cfg, params["shared"]["ln2"], x),
+            )
+            x = x + f
+
+            def mamba_body(xx, p):
+                y2, st = m2.mamba2_apply_seq(
+                    p["mamba"], _apply_norm(cfg, p["ln"], xx), st0,
+                    cfg.ssm_state, cfg.ssm_head_dim, chunk=min(cfg.ssm_chunk, s),
+                )
+                return xx + y2, st
+
+            x, mst = jax.lax.scan(mamba_body, x, p_layers)
+            return x, (cache, mst)
+
+        h, (kv, mst) = jax.lax.scan(body, h, (params["blocks"], lora_xs))
+        return h, {"kv": kv, "mamba": mst}
+    if fam == "audio":
+        h_enc = _encode_audio(cfg, params, batch["frames"])
+        h = h + sinusoidal_positions(s, cfg.d_model)[None].astype(h.dtype)
+
+        def body(carry, p):
+            x = carry
+            y, cache = capture(p["attn"], _apply_norm(cfg, p["ln1"], x))
+            x = x + y
+            hx = _attn_seq(
+                cfg, p["xattn"], _apply_norm(cfg, p["lnx"], x), positions,
+                causal=False, kv=_cross_kv(cfg, p["xattn"], h_enc),
+            )
+            x = x + hx
+            f, _ = _ffn_apply(cfg, p["ffn"], _apply_norm(cfg, p["ln2"], x))
+            return x + f, cache
+
+        h, kv = jax.lax.scan(body, h, params["dec_blocks"])
+        ck, cv = jax.vmap(lambda p: _cross_kv(cfg, p, h_enc))(
+            params["dec_blocks"]["xattn"]
+        )
+        return h, {"kv": kv, "cross": {"k": ck, "v": cv}}
+    raise ValueError(fam)

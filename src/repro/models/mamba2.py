@@ -1,0 +1,191 @@
+"""Mamba-2 (SSD) block — the state-space half of zamba2-2.7b.
+
+Implements the chunked SSD algorithm (quadratic within chunks of length L,
+linear scan across chunks), which is both the published efficient form and
+the TPU-friendly one: the intra-chunk term is batched matmuls (MXU work),
+and the cross-chunk state scan has seq/L sequential steps instead of seq.
+
+Recurrence (per head h, state N=d_state, head width P):
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * x_t B_t^T      (P x N)
+    y_t = h_t C_t + D x_t
+
+Decode carries (conv_state, ssd_state): O(1) per token -> long_500k runs.
+A step-scan reference (``mamba2_apply_seq_ref``) validates the chunked math
+in tests/test_models.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Px, dense_init, rms_norm
+
+__all__ = [
+    "mamba2_init",
+    "mamba2_apply_seq",
+    "mamba2_apply_seq_ref",
+    "mamba2_apply_step",
+    "mamba2_init_state",
+]
+
+CONV_K = 4  # short causal conv width
+
+
+def mamba2_init(
+    keygen,
+    d_model: int,
+    d_state: int = 64,
+    head_dim: int = 64,
+    expand: int = 2,
+    dtype=jnp.float32,
+):
+    d_inner = expand * d_model
+    H = d_inner // head_dim
+    return {
+        # in_proj -> [z (d_inner), x (d_inner), B (N), C (N), dt (H)]
+        "in_proj": dense_init(
+            keygen(),
+            (d_model, 2 * d_inner + 2 * d_state + H),
+            ("embed", "heads_flat"),
+            dtype,
+        ),
+        "conv_w": Px(
+            jnp.zeros((CONV_K, d_inner + 2 * d_state), dtype),
+            (None, "heads_flat"),
+        ),
+        "conv_b": Px(jnp.zeros((d_inner + 2 * d_state,), dtype), ("heads_flat",)),
+        "A_log": Px(jnp.zeros((H,), jnp.float32), (None,)),
+        "D": Px(jnp.ones((H,), jnp.float32), (None,)),
+        "dt_bias": Px(jnp.full((H,), -4.6, jnp.float32), (None,)),  # softplus^-1(0.01)
+        "norm": Px(jnp.ones((d_inner,), dtype), ("heads_flat",)),
+        "out_proj": dense_init(keygen(), (d_inner, d_model), ("heads_flat", "embed"), dtype),
+    }
+
+
+def mamba2_init_state(
+    batch: int, d_model: int, d_state: int = 64, head_dim: int = 64, expand: int = 2
+):
+    d_inner = expand * d_model
+    H = d_inner // head_dim
+    return {
+        "conv": jnp.zeros((batch, CONV_K - 1, d_inner + 2 * d_state), jnp.float32),
+        "ssd": jnp.zeros((batch, H, head_dim, d_state), jnp.float32),
+    }
+
+
+def _split_proj(p, x, d_model, d_state, head_dim, expand):
+    d_inner = expand * d_model
+    H = d_inner // head_dim
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, rest = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt = jnp.split(rest, [d_inner + 2 * d_state], axis=-1)
+    return z, xbc, dt, d_inner, H
+
+
+def _causal_conv(p, xbc, conv_state):
+    """Depthwise causal conv over (b, s, ch); returns (y, new_state)."""
+    pad = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    w = p["conv_w"].astype(xbc.dtype)  # (K, ch)
+    y = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i] for i in range(CONV_K)
+    ) + p["conv_b"].astype(xbc.dtype)
+    new_state = pad[:, -(CONV_K - 1) :, :].astype(jnp.float32)
+    return jax.nn.silu(y.astype(jnp.float32)).astype(xbc.dtype), new_state
+
+
+def _ssd_chunked(xh, B, C, dt_a, A, s0, chunk: int):
+    """Chunked SSD.  xh (b,s,H,P); B,C (b,s,N); dt_a (b,s,H) = dt (f32);
+    A (H,) negative.  Returns (y (b,s,H,P), final state (b,H,P,N)).
+
+    Scans over chunks (carrying the running state) and does the quadratic
+    intra-chunk work inside the scan body, so peak memory is one chunk's
+    (l, l, H) decay tensor rather than the whole sequence's.
+    """
+    b, s, H, P = xh.shape
+    N = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    cf = lambda a: a.astype(jnp.float32).reshape(b, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+    xh_c, B_c, C_c, dt_c = cf(xh), cf(B), cf(C), cf(dt_a)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(S, inp):
+        x_, B_, C_, dt = inp  # (b,l,H,P), (b,l,N), (b,l,N), (b,l,H)
+        la = dt * A  # (b,l,H) log-decay, <= 0
+        cum = jnp.cumsum(la, axis=1)  # inclusive
+        # intra-chunk: y_t += sum_{u<=t} C_t.B_u exp(cum_t-cum_u) dt_u x_u
+        seg = cum[:, :, None, :] - cum[:, None, :, :]  # (b,t,u,H)
+        decay = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        cb = jnp.einsum("btn,bun->btu", C_, B_)
+        M = cb[..., None] * decay * dt[:, None, :, :]  # (b,t,u,H)
+        y = jnp.einsum("btuh,buhp->bthp", M, x_)
+        # inter-chunk: y_t += exp(cum_t) C_t . S_in
+        y = y + jnp.einsum("bth,btn,bhpn->bthp", jnp.exp(cum), C_, S)
+        # state update: S_out = exp(cum_L) S_in + sum_u exp(cum_L-cum_u) dt_u x_u B_u
+        tail = jnp.exp(cum[:, -1:, :] - cum) * dt  # (b,l,H)
+        S_new = S * jnp.exp(cum[:, -1, :])[:, :, None, None] + jnp.einsum(
+            "buh,buhp,bun->bhpn", tail, x_, B_
+        )
+        return S_new, y
+
+    S_final, ys = jax.lax.scan(step, s0, (xh_c, B_c, C_c, dt_c))
+    y = ys.swapaxes(0, 1).reshape(b, s, H, P)
+    return y, S_final
+
+
+def mamba2_apply_seq(
+    p, x, state, d_state: int = 64, head_dim: int = 64, expand: int = 2,
+    chunk: int = 128,
+):
+    """Full-sequence forward. x (b, s, d_model). Returns (y, new_state)."""
+    b, s, d_model = x.shape
+    z, xbc_raw, dt_raw, d_inner, H = _split_proj(p, x, d_model, d_state, head_dim, expand)
+    xbc, conv_state = _causal_conv(p, xbc_raw, state["conv"])
+    xs, B, C = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+    xh = xs.reshape(b, s, H, head_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (b,s,H)
+    A = -jnp.exp(p["A_log"])  # (H,) negative
+    chunk = min(chunk, s)
+    while s % chunk:  # largest divisor of s <= requested chunk
+        chunk -= 1
+    y, S = _ssd_chunked(xh, B, C, dt, A, state["ssd"], chunk)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, {"conv": conv_state, "ssd": S}
+
+
+def mamba2_apply_seq_ref(
+    p, x, state, d_state: int = 64, head_dim: int = 64, expand: int = 2
+):
+    """Step-by-step scan reference (tests oracle for the chunked math)."""
+    b, s, d_model = x.shape
+    z, xbc_raw, dt_raw, d_inner, H = _split_proj(p, x, d_model, d_state, head_dim, expand)
+    xbc, conv_state = _causal_conv(p, xbc_raw, state["conv"])
+    xs, B, C = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+    xh = xs.reshape(b, s, H, head_dim).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    def step(S, inp):
+        x_t, B_t, C_t, dt_t = inp  # (b,H,P), (b,N), (b,N), (b,H)
+        dec = jnp.exp(dt_t * A)  # (b,H)
+        S_new = S * dec[:, :, None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt_t, x_t, B_t
+        )
+        y_t = jnp.einsum("bhpn,bn->bhp", S_new, C_t)
+        return S_new, y_t
+
+    sf = lambda a: a.astype(jnp.float32).swapaxes(0, 1)
+    S, ys = jax.lax.scan(step, state["ssd"], (sf(xh), sf(B), sf(C), sf(dt)))
+    y = ys.swapaxes(0, 1) + p["D"][None, None, :, None] * xh
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, {"conv": conv_state, "ssd": S}
+
+
+def mamba2_apply_step(p, x, state, d_state: int = 64, head_dim: int = 64, expand: int = 2):
+    """Single-token decode: x (b, 1, d). Uses the ref recurrence (s=1)."""
+    return mamba2_apply_seq_ref(p, x, state, d_state, head_dim, expand)

@@ -1,0 +1,149 @@
+"""Mixture-of-Experts with capacity-dropped, gather-based token dispatch.
+
+The dispatch is, structurally, the paper's SpMM: the router builds a sparse
+(tokens x experts) assignment matrix and the expert computation multiplies
+dense expert weights against the rows gathered by that sparse matrix.  The
+tests cross-validate this implementation against a literal SpMM dispatch
+built from core.formats CSR (tests/test_moe.py).
+
+Dispatch is batched per sequence row (no global sort), so under pjit with
+batch-sharded activations all sorting/gathering stays shard-local; only the
+expert einsum crosses the 'model' (expert-parallel) axis.  Capacity dropping
+follows the standard top-k MoE recipe: per (row, expert) capacity
+C = ceil(seq * top_k * capacity_factor / n_experts); overflow tokens fall
+back to a zero contribution from that expert (their gate weight is lost,
+like Switch/GShard dropping).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, shard
+
+__all__ = ["MoEConfig", "moe_init", "moe_apply", "moe_apply_dense_ref"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int  # per-expert hidden size
+    capacity_factor: float = 1.25
+    router_zloss: float = 1e-3
+
+
+def moe_init(keygen, d_model: int, cfg: MoEConfig, dtype=jnp.float32,
+             partition: str = "ep"):
+    """partition="ep": experts sharded over 'model' (baseline; dispatch
+    buffer crosses the expert axis).  partition="tp": experts replicated,
+    the expert-internal d_ff sharded over 'model' (Megatron-style) — the
+    SS1 hillclimb variant: dispatch/combine stay shard-local and only the
+    combined (b,s,d) output reduces (EXPERIMENTS.md SS-Perf/granite).
+    """
+    E, f = cfg.n_experts, cfg.d_ff
+    e_ax, f_ax = ("experts", "expert_mlp") if partition == "ep" else (None, "mlp")
+    return {
+        "router": dense_init(keygen(), (d_model, E), ("embed", None), jnp.float32),
+        "wi_gate": dense_init(keygen(), (E, d_model, f), (e_ax, "embed", f_ax), dtype),
+        "wi_up": dense_init(keygen(), (E, d_model, f), (e_ax, "embed", f_ax), dtype),
+        "wo": dense_init(keygen(), (E, f, d_model), (e_ax, f_ax, "embed"), dtype),
+    }
+
+
+def _route(p, x, cfg: MoEConfig):
+    """Router in f32. Returns (weights (b,s,k), ids (b,s,k), aux losses)."""
+    logits = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    weights, ids = jax.lax.top_k(logits, cfg.top_k)
+    weights = jax.nn.softmax(weights, axis=-1)
+    # Aux losses: load-balance (Switch) + router z-loss.
+    probs = jax.nn.softmax(logits, axis=-1)
+    density = jnp.mean(
+        jax.nn.one_hot(ids, cfg.n_experts, dtype=jnp.float32), axis=(1, 2)
+    )  # (b, E) fraction of slots per expert
+    mean_probs = probs.mean(axis=1)  # (b, E)
+    lb_loss = cfg.n_experts * jnp.mean(jnp.sum(density * mean_probs, axis=-1))
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return weights, ids, lb_loss, cfg.router_zloss * z_loss
+
+
+def moe_apply(p, x, cfg: MoEConfig, partition: str = "ep"):
+    """x (b, s, d) -> (y (b, s, d), aux_loss scalar)."""
+    b, s, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(int(s * k * cfg.capacity_factor / E), 1)
+    weights, ids, lb_loss, z_loss = _route(p, x, cfg)
+
+    # --- dispatch: per sequence row, rank tokens within each expert.
+    flat_ids = ids.reshape(b, s * k)  # slot t*k+j
+    onehot = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)  # (b, s*k, E)
+    ranks = jnp.cumsum(onehot, axis=1) - 1  # rank within expert
+    rank_of_slot = jnp.take_along_axis(
+        ranks, flat_ids[..., None], axis=-1
+    )[..., 0]  # (b, s*k)
+    keep = rank_of_slot < C
+    # destination index inside the (E*C) dispatch buffer (dropped -> E*C).
+    dest = jnp.where(keep, flat_ids * C + rank_of_slot, E * C)
+
+    # each token feeds its k slots contiguously: a broadcast, not a gather
+    # (backward is then a sum over k — no scatter collective, cf. §Perf)
+    x_slots = jnp.broadcast_to(
+        x[:, :, None, :], (b, s, k, d)
+    ).reshape(b, s * k, d)
+    buf = jnp.zeros((b, E * C + 1, d), x.dtype)
+    buf = buf.at[jnp.arange(b)[:, None], dest, :].add(
+        x_slots, mode="promise_in_bounds"
+    )
+    # pin the scatter output itself: batch-sharded, replicated elsewhere —
+    # otherwise the partitioner distributes the scatter over 'model' and
+    # pays an all-reduce + permute per layer (see EXPERIMENTS.md §Perf)
+    buf = shard(buf, "batch", None, None)
+    buf = buf[:, : E * C, :].reshape(b, E, C, d)
+    if partition == "ep":
+        buf = shard(buf, "batch", "act_model", None, None)
+    else:  # tp: dispatch stays batch-local; d_ff shards over 'model'
+        buf = shard(buf, "batch", None, None, None)
+
+    # --- expert computation (E batched SwiGLU; sharded over 'model').
+    gate = jnp.einsum("becd,edf->becf", buf, p["wi_gate"])
+    up = jnp.einsum("becd,edf->becf", buf, p["wi_up"])
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    out = jnp.einsum("becf,efd->becd", h, p["wo"])  # (b, E, C, d)
+    if partition == "ep":
+        out = shard(out, "batch", "act_model", None, None)
+    else:
+        out = shard(out, "batch", None, None, None)
+
+    # --- combine: gather each kept slot's expert output, weight, sum over k.
+    out_flat = out.reshape(b, E * C, d)
+    out_flat = jnp.concatenate(
+        [out_flat, jnp.zeros((b, 1, d), out.dtype)], axis=1
+    )  # dropped slots read the zero row
+    out_flat = shard(out_flat, "batch", None, None)
+    slot_out = jnp.take_along_axis(
+        out_flat, dest[..., None], axis=1, mode="promise_in_bounds"
+    )
+    slot_out = shard(slot_out, "batch", None, None)
+    w_slots = weights.reshape(b, s * k).astype(slot_out.dtype)
+    slot_out = slot_out * w_slots[..., None]
+    y = slot_out.reshape(b, s, k, d).sum(axis=2)
+    return y, lb_loss * 0.01 + z_loss
+
+
+def moe_apply_dense_ref(p, x, cfg: MoEConfig):
+    """Oracle: run every expert on every token, combine by gate weight.
+
+    O(E) flops — tests only.  No capacity dropping, so comparisons use high
+    capacity_factor where exactness is asserted.
+    """
+    weights, ids, _, _ = _route(p, x, cfg)
+    gate = jnp.einsum("bsd,edf->bsef", x, p["wi_gate"])
+    up = jnp.einsum("bsd,edf->bsef", x, p["wi_up"])
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    all_out = jnp.einsum("bsef,efd->bsed", h, p["wo"])  # (b, s, E, d)
+    sel = jnp.take_along_axis(all_out, ids[..., None], axis=2)  # (b, s, k, d)
+    return (sel * weights[..., None].astype(sel.dtype)).sum(axis=2)

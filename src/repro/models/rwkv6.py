@@ -1,0 +1,148 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free, data-dependent
+per-channel decay.  The assigned rwkv6-7b config: 32L, d=4096, heads of 64,
+d_ff=14336, vocab 65536.
+
+Time-mix uses the WKV6 recurrence per head (state S in R^{hd x hd}):
+
+    y_t = r_t @ (S_t + diag(u) k_t v_t^T)
+    S_{t+1} = diag(w_t) S_t + k_t v_t^T,   w_t = exp(-exp(decay_t))
+
+with decay_t data-dependent through a LoRA (the Finch novelty).  Training
+runs a lax.scan over time (the paper-faithful recurrence); a chunked
+parallel form is a §Perf variant.  Decode carries (shift_x, S) state —
+O(1) per token, which is why rwkv6 runs the long_500k cell.
+
+The paper tie-in: WKV is attention-free, so the Xeon-Phi paper's
+*attention-sharding* aspects don't apply (DESIGN.md §5); its FFN
+(channel-mix) is sparse-FFN capable like any MLP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Px, dense_init, rms_norm
+
+__all__ = ["rwkv6_init", "rwkv6_apply_seq", "rwkv6_apply_step", "rwkv6_init_state"]
+
+LORA_MIX = 32
+LORA_DECAY = 64
+
+
+def rwkv6_init(keygen, d_model: int, d_ff: int, head_dim: int = 64, dtype=jnp.float32):
+    H = d_model // head_dim
+    p = {
+        # dynamic token-shift mixing (5 targets: w, k, v, r, g)
+        "mu_base": Px(jnp.zeros((5, d_model), dtype), (None, "embed")),
+        "mix_w1": dense_init(keygen(), (d_model, 5 * LORA_MIX), ("embed", None), dtype),
+        "mix_w2": dense_init(keygen(), (5, LORA_MIX, d_model), (None, None, "embed"), dtype),
+        # projections (flattened head layout for shardability)
+        "wr": dense_init(keygen(), (d_model, d_model), ("embed", "heads_flat"), dtype),
+        "wk": dense_init(keygen(), (d_model, d_model), ("embed", "heads_flat"), dtype),
+        "wv": dense_init(keygen(), (d_model, d_model), ("embed", "heads_flat"), dtype),
+        "wg": dense_init(keygen(), (d_model, d_model), ("embed", "heads_flat"), dtype),
+        "wo": dense_init(keygen(), (d_model, d_model), ("heads_flat", "embed"), dtype),
+        # data-dependent decay LoRA
+        "decay_base": Px(jnp.full((d_model,), -6.0, dtype), ("embed",)),
+        "decay_w1": dense_init(keygen(), (d_model, LORA_DECAY), ("embed", None), dtype),
+        "decay_w2": dense_init(keygen(), (LORA_DECAY, d_model), (None, "embed"), dtype),
+        "bonus_u": Px(jnp.zeros((H, head_dim), dtype), (None, None)),
+        "ln_x": Px(jnp.ones((d_model,), dtype), ("embed",)),
+        # channel mix
+        "cm_mu": Px(jnp.zeros((2, d_model), dtype), (None, "embed")),
+        "cm_wk": dense_init(keygen(), (d_model, d_ff), ("embed", "mlp"), dtype),
+        "cm_wv": dense_init(keygen(), (d_ff, d_model), ("mlp", "embed"), dtype),
+        "cm_wr": dense_init(keygen(), (d_model, d_model), ("embed", "heads_flat"), dtype),
+        # pre-norms (RWKV uses a norm before each mix)
+        "ln1": Px(jnp.ones((d_model,), dtype), ("embed",)),
+        "ln2": Px(jnp.ones((d_model,), dtype), ("embed",)),
+    }
+    return p
+
+
+def rwkv6_init_state(batch: int, d_model: int, head_dim: int = 64, dtype=jnp.float32):
+    H = d_model // head_dim
+    return {
+        "tm_shift": jnp.zeros((batch, d_model), dtype),
+        "cm_shift": jnp.zeros((batch, d_model), dtype),
+        "wkv": jnp.zeros((batch, H, head_dim, head_dim), jnp.float32),
+    }
+
+
+def _mix_inputs(p, x, xx):
+    """Finch dynamic token-shift: 5 mixed streams (w, k, v, r, g)."""
+    delta = xx - x  # (b, s, d)
+    base = x + delta * p["mu_base"][0]
+    lora = jnp.tanh(jnp.einsum("bsd,dm->bsm", base, p["mix_w1"]))
+    lora = lora.reshape(*lora.shape[:-1], 5, LORA_MIX)
+    offs = jnp.einsum("bsnm,nmd->nbsd", lora, p["mix_w2"])
+    mu = p["mu_base"][:, None, None, :] + offs  # (5, b, s, d)
+    return x[None] + delta[None] * mu  # streams (5, b, s, d)
+
+
+def _decay(p, xw):
+    lora = jnp.tanh(jnp.einsum("bsd,dm->bsm", xw, p["decay_w1"]))
+    d = p["decay_base"] + jnp.einsum("bsm,md->bsd", lora, p["decay_w2"])
+    return jnp.exp(-jnp.exp(d.astype(jnp.float32)))  # (b, s, d) in (0,1)
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """Sequential WKV6. r,k,v,w: (b, s, H, hd); u: (H, hd); s0: (b,H,hd,hd)."""
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # each (b, H, hd)
+        a_t = jnp.einsum("bhi,bhj->bhij", k_t, v_t)  # outer k x v
+        y_t = jnp.einsum(
+            "bhi,bhij->bhj", r_t, S + u[None, :, :, None] * a_t
+        )
+        S_new = w_t[..., None] * S + a_t
+        return S_new, y_t
+
+    seq_first = lambda a: a.astype(jnp.float32).transpose(1, 0, 2, 3)
+    S, ys = jax.lax.scan(
+        step, s0, (seq_first(r), seq_first(k), seq_first(v), seq_first(w))
+    )
+    return ys.transpose(1, 0, 2, 3), S  # (b, s, H, hd), final state
+
+
+def rwkv6_apply_seq(p, x_in, state, head_dim: int = 64):
+    """Full-sequence forward with internal pre-norms and residuals.
+
+    x_in (b, s, d). Returns (out, new_state) with out = x_in + tm + cm.
+    Shift states hold the *normed* last token (matching the official impl).
+    """
+    b, s, d = x_in.shape
+    H = d // head_dim
+    # ---- time mix
+    x = rms_norm(x_in, p["ln1"])
+    xx = jnp.concatenate([state["tm_shift"][:, None, :], x[:, :-1]], axis=1)
+    xw, xk, xv, xr, xg = _mix_inputs(p, x, xx)
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"]).reshape(b, s, H, head_dim)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"]).reshape(b, s, H, head_dim)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"]).reshape(b, s, H, head_dim)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"]).astype(jnp.float32))
+    w = _decay(p, xw).reshape(b, s, H, head_dim)
+    ys, S = _wkv_scan(r, k, v, w, p["bonus_u"].astype(jnp.float32), state["wkv"])
+    y = ys.reshape(b, s, d)
+    y = rms_norm(y, p["ln_x"]) * g.astype(y.dtype)
+    y = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), p["wo"])
+    # ---- channel mix (pre-normed residual branch)
+    x_mid = x_in + y
+    xc = rms_norm(x_mid, p["ln2"])
+    cc = jnp.concatenate([state["cm_shift"][:, None, :], xc[:, :-1]], axis=1)
+    dlt = cc - xc
+    ck = xc + dlt * p["cm_mu"][0]
+    cr = xc + dlt * p["cm_mu"][1]
+    kk = jnp.einsum("bsd,df->bsf", ck, p["cm_wk"])
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    cv = jnp.einsum("bsf,fd->bsd", kk, p["cm_wv"])
+    out = x_mid + cv * jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", cr, p["cm_wr"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    new_state = {"tm_shift": x[:, -1], "cm_shift": xc[:, -1], "wkv": S}
+    return out, new_state
+
+
+def rwkv6_apply_step(p, x, state, head_dim: int = 64):
+    """Single-token decode. x (b, 1, d)."""
+    return rwkv6_apply_seq(p, x, state, head_dim)

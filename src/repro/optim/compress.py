@@ -1,0 +1,53 @@
+"""int8 error-feedback gradient compression for data-parallel all-reduce.
+
+The distributed-optimization trick for bandwidth-bound DP meshes: quantize
+the gradient to int8 with a per-tensor scale before the cross-replica
+reduce, keep the quantization error locally, and add it back before the
+next step's quantization ("error feedback" — guarantees convergence for
+SGD-family methods under standard assumptions).
+
+Used inside shard_map regions (manual-DP mode / examples); under plain pjit
+the DP reduction is fused into backward by GSPMD and can't be intercepted —
+that trade-off is documented in DESIGN.md §7.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "ef_compressed_psum"]
+
+
+def quantize_int8(x: jax.Array):
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compressed_psum(grad: jax.Array, error: jax.Array, axis: str):
+    """Error-feedback compressed all-reduce over mesh axis ``axis``.
+
+    grad: this shard's local gradient contribution (f32/bf16).
+    error: carried quantization error from the previous step (f32).
+    Returns (reduced_grad_f32, new_error).
+
+    Wire format: int8 payload + f32 scale -> ~4x less all-reduce traffic
+    than f32 (int8 summed in int32 to avoid overflow across shards).
+    """
+    g = grad.astype(jnp.float32) + error
+    q, scale = quantize_int8(g)
+    new_error = g - dequantize_int8(q, scale)
+    # Max-scale so all shards dequantize consistently after the int sum.
+    scale_max = jax.lax.pmax(scale, axis)
+    q_rescaled = jnp.clip(
+        jnp.round(g / scale_max), -127, 127
+    ).astype(jnp.int8)
+    new_error = g - q_rescaled.astype(jnp.float32) * scale_max
+    total = jax.lax.psum(q_rescaled.astype(jnp.int32), axis)
+    return total.astype(jnp.float32) * scale_max, new_error

@@ -1,0 +1,194 @@
+"""Model-layer numerics: attention vs reference, SSD chunk vs step scan,
+RWKV state continuity, MoE vs dense oracle, decode==forward consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import mamba2 as m2
+from repro.models import rwkv6 as rw
+from repro.models.attention import (
+    decode_attention,
+    flash_attention,
+    init_kv_cache,
+    update_kv_cache,
+)
+from repro.models.common import KeyGen, split_params
+from repro.models.lm import ModelConfig, decode_step, forward, init_model, prefill
+from repro.models.moe import MoEConfig, moe_apply, moe_apply_dense_ref, moe_init
+
+
+def ref_attn(q, k, v, causal=True, window=None):
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    kk = jnp.repeat(k, g, axis=2)
+    vv = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk) * hd ** -0.5
+    i = jnp.arange(sq)[:, None]
+    j = jnp.arange(k.shape[1])[None, :]
+    m = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        m &= j <= i
+    if window:
+        m &= i - j < window
+    s = jnp.where(m, s, -1e30)
+    return jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), vv)
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(causal=True), dict(causal=False), dict(causal=True, window=11),
+    dict(causal=True, skip_masked_blocks=True),
+])
+def test_flash_attention_vs_ref(kwargs):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, 64, 8, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 4, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 64, 4, 16))
+    skip = kwargs.pop("skip_masked_blocks", False)
+    out = flash_attention(q, k, v, q_chunk=16, kv_chunk=16,
+                          skip_masked_blocks=skip, **kwargs)
+    ref = ref_attn(q, k, v, **kwargs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_decode_attention_matches_ref_incl_ring_buffer():
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, 24, 8, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 4, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 24, 4, 16))
+    for slots, window in [(32, None), (8, 8)]:
+        cache = init_kv_cache(2, slots, 4, 16, jnp.float32)
+        outs = []
+        for t in range(24):
+            cache = update_kv_cache(cache, k[:, t : t + 1], v[:, t : t + 1])
+            outs.append(decode_attention(q[:, t : t + 1], cache, window=window))
+        got = jnp.concatenate(outs, axis=1)
+        ref = ref_attn(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+def test_mamba2_chunked_matches_step_scan():
+    kg = KeyGen(0)
+    p, _ = split_params(m2.mamba2_init(kg, 64, d_state=16, head_dim=16))
+    p["conv_w"] = jax.random.normal(kg(), p["conv_w"].shape) * 0.2
+    x = jax.random.normal(kg(), (2, 64, 64)) * 0.5
+    st = m2.mamba2_init_state(2, 64, 16, 16)
+    for chunk in (8, 16, 64):
+        y1, s1 = m2.mamba2_apply_seq(p, x, st, 16, 16, chunk=chunk)
+        y2, s2 = m2.mamba2_apply_seq_ref(p, x, st, 16, 16)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+        np.testing.assert_allclose(
+            np.asarray(s1["ssd"]), np.asarray(s2["ssd"]), atol=1e-4
+        )
+
+
+@pytest.mark.parametrize("module", ["mamba2", "rwkv6"])
+def test_ssm_state_continuity(module):
+    """split-sequence forward with carried state == full forward."""
+    kg = KeyGen(1)
+    x = jax.random.normal(kg(), (2, 48, 64)) * 0.5
+    if module == "mamba2":
+        p, _ = split_params(m2.mamba2_init(kg, 64, 16, 16))
+        st = m2.mamba2_init_state(2, 64, 16, 16)
+        full, _ = m2.mamba2_apply_seq(p, x, st, 16, 16, chunk=16)
+        ya, sa = m2.mamba2_apply_seq(p, x[:, :16], st, 16, 16, chunk=16)
+        yb, _ = m2.mamba2_apply_seq(p, x[:, 16:], sa, 16, 16, chunk=16)
+    else:
+        p, _ = split_params(rw.rwkv6_init(kg, 64, 128, 16))
+        st = rw.rwkv6_init_state(2, 64, 16)
+        full, _ = rw.rwkv6_apply_seq(p, x, st, 16)
+        ya, sa = rw.rwkv6_apply_seq(p, x[:, :16], st, 16)
+        yb, _ = rw.rwkv6_apply_seq(p, x[:, 16:], sa, 16)
+    got = jnp.concatenate([ya, yb], axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full), atol=1e-4)
+
+
+def test_moe_matches_dense_oracle_at_high_capacity():
+    kg = KeyGen(2)
+    cfg = MoEConfig(n_experts=4, top_k=2, d_ff=32, capacity_factor=8.0)
+    p, _ = split_params(moe_init(kg, 64, cfg))
+    x = jax.random.normal(kg(), (2, 16, 64)) * 0.5
+    y, aux = moe_apply(p, x, cfg)
+    y_ref = moe_apply_dense_ref(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)
+    assert np.isfinite(float(aux))
+
+
+def test_moe_dispatch_is_a_spmm():
+    """Cross-validate the dispatch against a literal CSR SpMM: the (token x
+    expert-slot) assignment matrix applied to X must equal the dispatch
+    buffer contents — the paper's kernel inside the MoE layer."""
+    from repro.core import csr_from_coo, spmm_csr
+
+    kg = KeyGen(3)
+    cfg = MoEConfig(n_experts=4, top_k=2, d_ff=32, capacity_factor=8.0)
+    p, _ = split_params(moe_init(kg, 32, cfg))
+    x = jax.random.normal(kg(), (1, 8, 32))
+    # replicate the routing decisions
+    from repro.models.moe import _route
+
+    weights, ids, _, _ = _route(p, x, cfg)
+    s, k = 8, cfg.top_k
+    C = max(int(s * k * cfg.capacity_factor / cfg.n_experts), 1)
+    flat = np.asarray(ids.reshape(s * k))
+    # build dispatch one-hot CSR: row = expert slot (e*C + rank), col = token
+    rows, cols = [], []
+    counts = {}
+    for slot in range(s * k):
+        e = int(flat[slot])
+        r = counts.get(e, 0)
+        counts[e] = r + 1
+        if r < C:
+            rows.append(e * C + r)
+            cols.append(slot // k)
+    disp = csr_from_coo(
+        (cfg.n_experts * C, s), rows, cols, np.ones(len(rows), np.float32),
+        sum_duplicates=False,
+    )
+    buf_spmm = np.asarray(
+        spmm_csr(disp.device(), x[0], n_rows=cfg.n_experts * C)
+    ).reshape(cfg.n_experts, C, 32)
+    # reproduce moe_apply's internal buffer
+    from repro.models import moe as moe_mod
+
+    y, _ = moe_apply(p, x, cfg)  # smoke: runs
+    # rebuild buffer exactly as moe_apply does
+    flat_ids = ids.reshape(1, s * k)
+    onehot = jax.nn.one_hot(flat_ids, cfg.n_experts, dtype=jnp.int32)
+    ranks = jnp.cumsum(onehot, axis=1) - 1
+    rank_of_slot = jnp.take_along_axis(ranks, flat_ids[..., None], axis=-1)[..., 0]
+    keep = rank_of_slot < C
+    dest = jnp.where(keep, flat_ids * C + rank_of_slot, cfg.n_experts * C)
+    token_of_slot = jnp.arange(s * k) // k
+    x_slots = jnp.take(x, token_of_slot, axis=1)
+    buf = jnp.zeros((1, cfg.n_experts * C + 1, 32), x.dtype)
+    buf = buf.at[jnp.arange(1)[:, None], dest, :].add(x_slots)
+    buf = np.asarray(buf[0, : cfg.n_experts * C].reshape(cfg.n_experts, C, 32))
+    np.testing.assert_allclose(buf, buf_spmm, atol=1e-5)
+
+
+def test_decode_matches_forward_all_families():
+    fams = [
+        dict(arch_id="dense", family="dense"),
+        dict(arch_id="moe", family="moe",
+             moe=MoEConfig(n_experts=4, top_k=2, d_ff=32, capacity_factor=8.0)),
+        dict(arch_id="rwkv", family="ssm", ssm_kind="rwkv6", ssm_head_dim=16),
+        dict(arch_id="zamba", family="hybrid", ssm_kind="mamba2", ssm_state=16,
+             ssm_head_dim=16, hybrid_period=1, lora_rank=4, ssm_chunk=16),
+    ]
+    for fk in fams:
+        cfg = ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                          d_ff=128, vocab=300, dtype=jnp.float32, remat="none",
+                          attn_chunk=16, **fk)
+        params, _ = init_model(cfg, 0)
+        rng = np.random.default_rng(0)
+        toks = jnp.asarray(rng.integers(0, 300, (2, 17)), jnp.int32)
+        full, _ = forward(cfg, params, {"tokens": toks})
+        st, lg = prefill(cfg, params, {"tokens": toks[:, :16]}, max_seq=24)
+        np.testing.assert_allclose(
+            np.asarray(lg), np.asarray(full[:, 15]), atol=2e-4, rtol=1e-3
+        )
+        st, lg2 = decode_step(cfg, params, st, toks[:, 16:17])
+        np.testing.assert_allclose(
+            np.asarray(lg2[:, 0]), np.asarray(full[:, 16]), atol=2e-4, rtol=1e-3
+        )

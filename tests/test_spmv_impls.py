@@ -1,0 +1,91 @@
+"""All SpMV/SpMM tiers agree (scalar -O1 analogue == vectorized == formats)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    bcsr_from_csr,
+    csr_from_dense,
+    sell_from_csr,
+    spmm_bcsr_dense,
+    spmm_csr,
+    spmv_csr,
+    spmv_csr_scalar,
+    spmv_sell,
+)
+
+
+@st.composite
+def square_sparse(draw):
+    n = draw(st.integers(4, 48))
+    density = draw(st.floats(0.02, 0.4))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    d = ((rng.random((n, n)) < density) * rng.standard_normal((n, n))).astype(
+        np.float32
+    )
+    x = rng.standard_normal(n).astype(np.float32)
+    return d, x
+
+
+@settings(max_examples=25, deadline=None)
+@given(square_sparse())
+def test_all_spmv_tiers_agree(dx):
+    d, x = dx
+    n = d.shape[0]
+    a = csr_from_dense(d)
+    ref = d @ x
+    y_vec = np.asarray(spmv_csr(a.device(), jnp.asarray(x), n_rows=n))
+    y_scl = np.asarray(spmv_csr_scalar(a.device(), jnp.asarray(x), n_rows=n))
+    s = sell_from_csr(a, C=8, sigma=16)
+    y_sell = np.asarray(spmv_sell(s.device(), jnp.asarray(x), n_rows=n))
+    np.testing.assert_allclose(y_vec, ref, atol=1e-4)
+    np.testing.assert_allclose(y_scl, ref, atol=1e-4)
+    np.testing.assert_allclose(y_sell, ref, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(square_sparse(), st.integers(1, 16))
+def test_spmm_matches_k_spmvs(dx, k):
+    """Paper §5: SpMM(X) column j == SpMV(x_j) — the k-fold amortization."""
+    d, _ = dx
+    n = d.shape[0]
+    rng = np.random.default_rng(k)
+    X = rng.standard_normal((n, k)).astype(np.float32)
+    a = csr_from_dense(d)
+    Y = np.asarray(spmm_csr(a.device(), jnp.asarray(X), n_rows=n))
+    for j in range(k):
+        yj = np.asarray(spmv_csr(a.device(), jnp.asarray(X[:, j]), n_rows=n))
+        np.testing.assert_allclose(Y[:, j], yj, atol=1e-4)
+
+
+def test_bcsr_dense_path():
+    rng = np.random.default_rng(0)
+    d = ((rng.random((40, 56)) < 0.2) * rng.standard_normal((40, 56))).astype(
+        np.float32
+    )
+    a = csr_from_dense(d)
+    b = bcsr_from_csr(a, (8, 8))
+    gm, gn = b.grid_shape
+    X = rng.standard_normal((56, 12)).astype(np.float32)
+    xp = np.zeros((gn * 8, 12), np.float32)
+    xp[:56] = X
+    out = spmm_bcsr_dense(b.device(), jnp.asarray(xp.reshape(gn, 8, 12)), n_block_rows=gm)
+    np.testing.assert_allclose(
+        np.asarray(out).reshape(-1, 12)[:40], d @ X, atol=1e-4
+    )
+
+
+def test_reordering_invariance_of_spmv():
+    """P A P^T (P x) == P (A x): SpMV commutes with symmetric permutation —
+    the correctness condition behind the paper's RCM study."""
+    rng = np.random.default_rng(5)
+    n = 64
+    d = ((rng.random((n, n)) < 0.1) * rng.standard_normal((n, n))).astype(np.float32)
+    x = rng.standard_normal(n).astype(np.float32)
+    a = csr_from_dense(d)
+    perm = rng.permutation(n)
+    ap = a.permuted(perm)
+    y_perm = np.asarray(spmv_csr(ap.device(), jnp.asarray(x[perm]), n_rows=n))
+    y = np.asarray(spmv_csr(a.device(), jnp.asarray(x), n_rows=n))
+    np.testing.assert_allclose(y_perm, y[perm], atol=1e-4)
