@@ -11,16 +11,10 @@ columns.
 """
 from __future__ import annotations
 
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.data.suite import SUITE, generate
-
-WARMUP = 3
-TIMED = 10
+from repro.tune.timing import TIMED, WARMUP, time_fn  # noqa: F401 — shared
+# timing protocol: the repro.tune measured search and every figure here use
+# the same clock and warmup/measure discipline.
 
 # v5e hardware model (same constants as launch/roofline.py)
 V5E_HBM = 819e9
@@ -34,20 +28,6 @@ def suite(scale: float):
     if key not in _suite_cache:
         _suite_cache[key] = {s.name: generate(s, scale) for s in SUITE}
     return _suite_cache[key]
-
-
-def time_fn(fn, *args) -> float:
-    """Median wall time (seconds) over TIMED runs after WARMUP."""
-    for _ in range(WARMUP):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    times = []
-    for _ in range(TIMED):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        times.append(time.perf_counter() - t0)
-    return float(np.median(times))
 
 
 def row(name: str, seconds: float, derived) -> str:

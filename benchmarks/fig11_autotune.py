@@ -1,0 +1,45 @@
+"""Autotuned kernel selection (repro.tune) vs the fixed-CSR baseline.
+
+Not a figure from the paper — it automates the paper's central empirical
+finding: the best SpMV configuration is matrix-dependent (Table 2 picks a
+different block shape per matrix; Fig 5 shows UCLD predicting the vgatherd
+crossover).  For every suite matrix the autotuner extracts features, prunes
+the candidate cross-product with the byte model, times the survivors, and
+the row reports:
+
+  plan           the winning format/impl/params
+  speedup        csr/vector search time / winning candidate search time
+                 (>= 1.0 by construction: the baseline is always measured)
+  searched       candidates timed / candidates enumerated (pruning at work)
+  cache_hit      whether a second build() skipped the search via the plan
+                 cache (must be True)
+
+us_per_call is an independent re-timing of ``op @ x`` through the facade.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.tune import PlanCache, SparseOperator
+
+from .common import row, suite, time_fn
+
+SCALE = 1 / 64
+
+
+def main(lines: list):
+    mats = suite(SCALE)
+    cache = PlanCache()  # in-process cache: fig-scoped, nothing on disk
+    rng = np.random.default_rng(0)
+    for name, a in mats.items():
+        x = jnp.asarray(rng.standard_normal(a.shape[1]).astype(np.float32))
+        op = SparseOperator.build(a, cache=cache, warmup=1, timed=5)
+        t_csr = op.measurements["csr/vector"]  # baseline always survives
+        t_best = op.plan.measured_s
+        op2 = SparseOperator.build(a, cache=cache)  # must hit the plan cache
+        t_apply = time_fn(lambda: op @ x)
+        lines.append(row(
+            f"fig11_{name}", t_apply,
+            f"plan={op.plan.candidate.key()};"
+            f"speedup_vs_csr={t_csr / t_best:.2f};"
+            f"searched={op.plan.n_measured}/{op.plan.n_candidates};"
+            f"cache_hit={op2.from_cache}"))

@@ -4,13 +4,18 @@ derived = GFlop/s of each tier (2*nnz flops), plus the speedup.  The paper's
 claim reproduced here: vectorization wins everywhere, by a matrix-dependent
 factor (correlated with UCLD — asserted in fig5).
 
+Both tiers go through the ``repro.tune`` facade with a pinned candidate
+(``SparseOperator.from_candidate``) — the same prepare + dispatch path the
+autotuner times in fig11, just with the selection forced.
+
 The scalar tier is O(nnz) *sequential*, so it runs on a trimmed matrix set
 at reduced scale (the paper's contrast needs relative, not absolute, size).
 """
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import spmv_csr, spmv_csr_scalar
+from repro.tune import SparseOperator, make
+
 from .common import gflops, row, suite, time_fn
 
 SCALE = 1 / 64
@@ -24,13 +29,14 @@ def main(lines: list):
     rng = np.random.default_rng(0)
     for name, a in mats.items():
         x = jnp.asarray(rng.standard_normal(a.shape[1]).astype(np.float32))
-        dev = a.device()
-        t_vec = time_fn(lambda: spmv_csr(dev, x, n_rows=a.shape[0]))
+        op_vec = SparseOperator.from_candidate(a, make("csr", "vector"))
+        t_vec = time_fn(lambda: op_vec @ x)
         g_vec = gflops(2 * a.nnz, t_vec)
         lines.append(row(f"fig4_vector_{name}", t_vec, f"{g_vec:.2f}GF"))
         _results.setdefault("vector", {})[name] = g_vec
         if name in SCALAR_SET:
-            t_scl = time_fn(lambda: spmv_csr_scalar(dev, x, n_rows=a.shape[0]))
+            op_scl = SparseOperator.from_candidate(a, make("csr", "scalar"))
+            t_scl = time_fn(lambda: op_scl @ x)
             g_scl = gflops(2 * a.nnz, t_scl)
             _results.setdefault("scalar", {})[name] = g_scl
             _results.setdefault("speedup", {})[name] = t_scl / t_vec

@@ -26,6 +26,7 @@ def main() -> None:
         fig8_rcm,
         fig9_spmm,
         fig10_arch_comparison,
+        fig11_autotune,
         table2_register_blocking,
     )
 
@@ -40,6 +41,7 @@ def main() -> None:
         "table2": table2_register_blocking,
         "fig9": fig9_spmm,
         "fig10": fig10_arch_comparison,
+        "fig11": fig11_autotune,
     }
     only = set(args.only.split(",")) if args.only else None
     lines: list = ["name,us_per_call,derived"]

@@ -6,11 +6,16 @@ dim pinned to the sublane/lane width, DESIGN.md §2).  For each (matrix,
 block): relative time vs unblocked CSR SpMM, fill ratio, stored-byte ratio.
 Reproduces Table 2's economics: only high-fill matrices benefit; the
 geometric-mean relative performance is <= 1 for large blocks.
+
+Every configuration runs through the ``repro.tune`` facade with a pinned
+candidate, so what is timed here is exactly what the autotuner would time.
 """
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bcsr_from_csr, spmm_bcsr_dense, spmm_csr
+from repro.core import bcsr_from_csr
+from repro.tune import SparseOperator, make
+
 from .common import row, suite, time_fn
 
 SCALE = 1 / 64
@@ -27,17 +32,13 @@ def main(lines: list):
         a = mats[name]
         m, n = a.shape
         X = jnp.asarray(rng.standard_normal((n, K)).astype(np.float32))
-        dev = a.device()
-        t_csr = time_fn(lambda: spmm_csr(dev, X, n_rows=m))
+        op_csr = SparseOperator.from_candidate(a, make("csr", "vector"), k=K)
+        t_csr = time_fn(lambda: op_csr @ X)
         csr_bytes = a.nnz * 8 + a.indptr.nbytes
         for b in BLOCKS:
             bc = bcsr_from_csr(a, b)
-            gm, gn = bc.grid_shape
-            xp = np.zeros((gn * b[1], K), np.float32)
-            xp[:n] = np.asarray(X)
-            xb = jnp.asarray(xp.reshape(gn, b[1], K))
-            bdev = bc.device()
-            t_b = time_fn(lambda: spmm_bcsr_dense(bdev, xb, n_block_rows=gm))
+            op_b = SparseOperator.from_candidate(a, make("bcsr", "ref", block=b), k=K)
+            t_b = time_fn(lambda: op_b @ X)
             rel = t_csr / t_b
             rels[b].append(rel)
             lines.append(row(

@@ -22,6 +22,7 @@ from repro.core import (
 )
 from repro.data.suite import generate
 from repro.kernels import ops as kops
+from repro.tune import PlanCache, SparseOperator
 
 
 def main():
@@ -53,6 +54,16 @@ def main():
     Y_k = kops.bcsr_spmm(bcsr, X, n_tile=16)
     print(f"  kernels agree: SpMV {np.allclose(y, y_k, atol=1e-3)}, "
           f"SpMM {np.allclose(Y, Y_k, atol=1e-3)}")
+
+    # 5. the autotuned facade: per-matrix kernel selection + plan cache
+    cache = PlanCache()
+    op = SparseOperator.build(a, cache=cache, warmup=1, timed=3)
+    y_t = op @ x
+    op2 = SparseOperator.build(a, cache=cache)  # same structure -> cache hit
+    print(f"  autotuned plan: {op.plan.candidate.key()} "
+          f"(timed {op.plan.n_measured}/{op.plan.n_candidates} candidates, "
+          f"rebuild from cache: {op2.from_cache}); "
+          f"agrees {np.allclose(y, y_t, atol=1e-3)}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,24 @@
+"""jax version compatibility shims, centralized.
+
+The repo pins no jax version; these names moved across 0.4.x/0.5.x:
+
+* ``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams``
+* ``jax.experimental.shard_map.shard_map`` -> ``jax.shard_map``
+
+Import from here so the next rename is a one-file fix.
+"""
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["CompilerParams", "shard_map"]
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pragma: no cover - depends on pinned jax
+    from jax.experimental.shard_map import shard_map

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from .compat import shard_map as _shard_map
 from .spmv import _rows_from_indptr
 
 __all__ = ["allgather_spmm", "ring_spmm", "local_spmm"]
@@ -49,7 +50,7 @@ def allgather_spmm(mesh, axis: str, stacked: dict[str, Any], x_sharded: jax.Arra
     n_rows = stacked["indptr"].shape[-1] - 1
 
     @functools.partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(P(axis), P(axis)),
         out_specs=P(axis),
@@ -76,7 +77,7 @@ def ring_spmm(mesh, axis: str, stacked_grid: dict[str, Any], x_sharded: jax.Arra
     n_steps = jax.device_count() if mesh is None else mesh.shape[axis]
 
     @functools.partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(P(axis), P(axis)),
         out_specs=P(axis),
@@ -100,8 +101,11 @@ def ring_spmm(mesh, axis: str, stacked_grid: dict[str, Any], x_sharded: jax.Arra
             return (nxt, acc), None
 
         acc0 = jnp.zeros((n_rows, x_local.shape[-1]), x_local.dtype)
-        # The accumulator must be marked device-varying for the scan carry.
-        acc0 = jax.lax.pcast(acc0, (axis,), to="varying")
+        # The accumulator must be marked device-varying for the scan carry
+        # (newer jax requires an explicit pcast; older versions have no such
+        # notion and the zeros carry is already fine).
+        if hasattr(jax.lax, "pcast"):
+            acc0 = jax.lax.pcast(acc0, (axis,), to="varying")
         init = (x_local, acc0)
         (x_final, acc), _ = jax.lax.scan(
             step, init, jnp.arange(n_steps, dtype=jnp.int32)

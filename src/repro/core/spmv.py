@@ -114,7 +114,13 @@ def spmm_bcsr_dense(
 
 
 # ---------------------------------------------------------------------------
-# Dispatch layer
+# Dispatch layer — thin back-compat wrappers.
+#
+# New code should go through the repro.tune facade instead:
+#     op = repro.tune.SparseOperator.build(csr);  y = op @ x
+# which autotunes the (format, impl, params) choice per matrix and caches
+# the plan.  These functions remain for callers that already hold prepared
+# format dicts and want explicit dispatch.
 # ---------------------------------------------------------------------------
 def spmv(fmt: str, mat: dict[str, Any], x: jax.Array, *, n_rows: int, impl: str = "vector"):
     if fmt == "csr":

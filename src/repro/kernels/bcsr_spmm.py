@@ -33,6 +33,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.compat import CompilerParams as _CompilerParams
+
 __all__ = ["bcsr_spmm_pallas"]
 
 
@@ -101,7 +103,7 @@ def bcsr_spmm_pallas(
             ),
         ),
         out_shape=jax.ShapeDtypeStruct((n_block_rows * bm, k), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -118,10 +118,14 @@ def sell_prepare(a: SELLMatrix, chunk_tile: int = 8) -> dict[str, Any]:
     }
 
 
-@functools.partial(jax.jit, static_argnames=("n_rows", "interpret"))
-def _sell_spmv_jit(prep_cols, prep_vals, prep_perm, x, *, n_rows, interpret):
+@functools.partial(
+    jax.jit, static_argnames=("n_rows", "chunk_tile", "interpret")
+)
+def _sell_spmv_jit(
+    prep_cols, prep_vals, prep_perm, x, *, n_rows, chunk_tile, interpret
+):
     sums = sell_spmv_pallas(
-        prep_cols, prep_vals, x, chunk_tile=8, interpret=interpret
+        prep_cols, prep_vals, x, chunk_tile=chunk_tile, interpret=interpret
     )
     valid = prep_perm >= 0
     y = jnp.zeros((n_rows,), x.dtype)
@@ -139,7 +143,8 @@ def sell_spmv(
     m, n = prep["shape"]
     return _sell_spmv_jit(
         prep["cols"], prep["vals"], prep["row_perm"], x,
-        n_rows=m, interpret=interpret,
+        n_rows=m, chunk_tile=int(prep.get("chunk_tile", 8)),
+        interpret=interpret,
     )
 
 
@@ -150,9 +155,44 @@ def sell_prepare_blocked(a, n_slabs: int, chunk_tile: int = 8,
                          C: int = 8, sigma: int = 64) -> dict[str, Any]:
     """Split A into column slabs, one SELL per slab (paper refs' cache
     blocking, Nishtala et al.): the kernel then keeps only an x-slab
-    resident in VMEM per pass instead of the whole vector."""
+    resident in VMEM per pass instead of the whole vector.
+
+    The split is fully vectorized: one searchsorted assigns every nonzero to
+    its slab, and each slab's CSR falls out of a boolean mask + bincount
+    (the mask preserves row-major nnz order, so per-row column order is
+    unchanged from A).
+    """
     from repro.core.formats import CSRMatrix, sell_from_csr
-    import numpy as np
+
+    m, n = a.shape
+    bounds = np.linspace(0, n, n_slabs + 1).astype(np.int64)
+    rows_of_nnz = np.repeat(np.arange(m, dtype=np.int64), np.diff(a.indptr))
+    slab_of_nnz = np.searchsorted(bounds[1:], a.indices, side="right")
+    slabs = []
+    for s in range(n_slabs):
+        lo, hi = int(bounds[s]), int(bounds[s + 1])
+        sel = slab_of_nnz == s
+        counts = np.bincount(rows_of_nnz[sel], minlength=m)
+        indptr = np.zeros(m + 1, dtype=a.indptr.dtype)
+        np.cumsum(counts, out=indptr[1:])
+        sub = CSRMatrix(
+            (m, hi - lo), indptr,
+            (a.indices[sel] - lo).astype(a.indices.dtype),
+            a.data[sel],
+        )
+        slabs.append(sell_prepare(sell_from_csr(sub, C=C, sigma=sigma,
+                                                width_align=8), chunk_tile))
+    return {"slabs": slabs, "bounds": bounds, "shape": a.shape}
+
+
+def _sell_prepare_blocked_loop(a, n_slabs: int, chunk_tile: int = 8,
+                               C: int = 8, sigma: int = 64) -> dict[str, Any]:
+    """Original O(m * n_slabs) python-row-loop slab split.
+
+    Kept only as the reference for the vectorized-equality regression test
+    (tests/test_kernel_edges.py); not used on any hot path.
+    """
+    from repro.core.formats import CSRMatrix, sell_from_csr
 
     m, n = a.shape
     bounds = np.linspace(0, n, n_slabs + 1).astype(np.int64)

@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.compat import CompilerParams as _CompilerParams
+
 __all__ = ["sell_spmv_pallas"]
 
 
@@ -67,7 +69,7 @@ def sell_spmv_pallas(
         ],
         out_specs=pl.BlockSpec((T * C,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n_chunks * C,), vals.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

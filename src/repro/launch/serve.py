@@ -1,7 +1,17 @@
-"""Serving launcher: batched decode over a reduced or full config.
+"""Serving launcher: batched LM decode, or autotuned sparse SpMV serving.
+
+LM decode over a reduced or full config:
 
   PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-3-4b \
       --reduced --requests 8 --slots 4
+
+Sparse workload: serve SpMV requests over a Table-1 suite matrix through the
+``repro.tune`` facade.  The first launch runs the autotuner's measured
+search; the winning plan is persisted in the on-disk plan cache
+(~/.cache/repro_tune, override with $REPRO_TUNE_CACHE), so a restarted
+server skips straight to the prepared kernel:
+
+  PYTHONPATH=src python -m repro.launch.serve --sparse cant --requests 64
 """
 from __future__ import annotations
 
@@ -11,20 +21,49 @@ import time
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_reduced
-from repro.models.lm import init_model
-from repro.runtime.server import BatchedServer, Request
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--max-seq", type=int, default=128)
-    args = ap.parse_args()
+def serve_sparse(args) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data.suite import SUITE, generate
+    from repro.tune import SparseOperator
+
+    names = [s.name for s in SUITE]
+    if args.sparse not in names:
+        raise SystemExit(
+            f"unknown suite matrix {args.sparse!r}; choose from: {', '.join(names)}"
+        )
+    a = generate(args.sparse, scale=args.scale)
+    t0 = time.perf_counter()
+    op = SparseOperator.build(a)  # default on-disk plan cache
+    t_build = time.perf_counter() - t0
+    rng = np.random.default_rng(0)
+    xs = [
+        jnp.asarray(rng.standard_normal(a.shape[1]).astype(np.float32))
+        for _ in range(args.requests)
+    ]
+    y = op @ xs[0]  # compile outside the timed loop
+    jax.block_until_ready(y)
+    t0 = time.perf_counter()
+    for x in xs:
+        y = op @ x
+    jax.block_until_ready(y)
+    dt = time.perf_counter() - t0
+    flops = 2 * a.nnz * len(xs)
+    print(
+        f"served {len(xs)} spmv requests on {args.sparse}@{args.scale:g} "
+        f"({a.shape[0]}x{a.shape[1]}, nnz={a.nnz}) in {dt:.3f}s "
+        f"({len(xs) / dt:.1f} req/s, {flops / dt / 1e9:.2f} GF/s); "
+        f"plan={op.plan.candidate.key()} "
+        f"({'plan cache' if op.from_cache else f'searched in {t_build:.1f}s'})"
+    )
+
+
+def serve_lm(args) -> None:
+    from repro.models.lm import init_model
+    from repro.runtime.server import BatchedServer, Request
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     params, _ = init_model(cfg, 0)
@@ -46,6 +85,30 @@ def main():
     print(f"served {done}/{len(reqs)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s, {srv.steps} decode steps, "
           f"batch occupancy {toks / max(srv.steps, 1):.2f}/{args.slots})")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default=None)
+    ap.add_argument("--sparse", default=None, metavar="MATRIX",
+                    help="serve autotuned SpMV over this suite matrix "
+                         "instead of an LM")
+    ap.add_argument("--scale", type=float, default=1 / 64,
+                    help="suite matrix scale for --sparse")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=128)
+    args = ap.parse_args()
+
+    if args.sparse is not None:
+        serve_sparse(args)
+        return
+    if args.arch is None:
+        ap.error("one of --arch or --sparse is required")
+    serve_lm(args)
 
 
 if __name__ == "__main__":

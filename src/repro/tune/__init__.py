@@ -1,0 +1,50 @@
+"""Autotuned kernel selection — the paper's per-matrix configuration choice
+(Table 2's block shapes, Fig 5's format crossover) as a subsystem.
+
+Pipeline: :mod:`features` (structural predictors from core.metrics) ->
+:mod:`candidates` (format x impl x params enumeration + byte-model pruning)
+-> :class:`SparseOperator.build` (measured search with the benchmark timer,
+plan-cached by structure fingerprint in :mod:`plan`).
+"""
+from .candidates import (
+    BCSR_BLOCKS,
+    Candidate,
+    DEFAULT_PRUNE_FACTOR,
+    SELL_SIGMAS,
+    bcsr_block_count,
+    enumerate_candidates,
+    estimate_cost,
+    make,
+    prune,
+    sell_padded_slots,
+)
+from .features import MatrixFeatures, extract
+from .operator import SparseOperator, prepare, runner
+from .plan import PLAN_VERSION, Plan, PlanCache, default_cache, fingerprint
+from .timing import TIMED, WARMUP, time_fn
+
+__all__ = [
+    "BCSR_BLOCKS",
+    "Candidate",
+    "DEFAULT_PRUNE_FACTOR",
+    "MatrixFeatures",
+    "PLAN_VERSION",
+    "Plan",
+    "PlanCache",
+    "SELL_SIGMAS",
+    "SparseOperator",
+    "TIMED",
+    "WARMUP",
+    "bcsr_block_count",
+    "default_cache",
+    "enumerate_candidates",
+    "estimate_cost",
+    "extract",
+    "fingerprint",
+    "make",
+    "prepare",
+    "prune",
+    "runner",
+    "sell_padded_slots",
+    "time_fn",
+]

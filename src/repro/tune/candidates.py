@@ -1,0 +1,250 @@
+"""Candidate enumeration and the byte-model cost estimate that prunes it.
+
+A *candidate* is one (format, impl, params) point from the cross-product the
+paper sweeps by hand: CSR scalar/vector (Fig 4's -O1/-O3 tiers), SELL-C-sigma
+with sigma in {1, 64, 256} and resident vs column-slabbed x (Fig 5 / cache
+blocking), and BCSR with the Table 2 block shapes.
+
+Pruning happens *before* any format is materialized or timed, from a cost
+model in abstract byte units: the paper's §4.2 application-bytes model per
+format (stored matrix bytes + vector traffic), scaled by an impl throughput
+penalty (the scalar tier has no SIMD — paper Fig 4 shows ~an order of
+magnitude; Pallas kernels on the CPU backend run in interpret mode and are
+never competitive, which the model encodes so the measured search skips
+them).  Candidates costlier than ``prune_factor`` x the cheapest estimate are
+dropped without being timed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable
+
+import numpy as np
+
+from repro.core.formats import CSRMatrix
+from repro.core.metrics import spmm_app_bytes, spmv_app_bytes
+
+from .features import MatrixFeatures
+
+__all__ = [
+    "Candidate",
+    "make",
+    "enumerate_candidates",
+    "estimate_cost",
+    "prune",
+    "sell_padded_slots",
+    "bcsr_block_count",
+    "DEFAULT_PRUNE_FACTOR",
+    "SELL_SIGMAS",
+    "BCSR_BLOCKS",
+]
+
+SELL_SIGMAS = (1, 64, 256)
+BCSR_BLOCKS = ((8, 8), (8, 16), (8, 128))  # Table 2's TPU-tile adaptation
+DEFAULT_PRUNE_FACTOR = 3.0
+
+# Impl throughput penalties (multiplies the byte estimate).  "scalar" is the
+# paper's unvectorized -O1 tier; "pallas" on the CPU backend runs the kernels
+# in interpret mode, which is orders of magnitude off and should never be
+# picked (on TPU the penalty is 1.0 and the kernels compete on bytes).
+SCALAR_SLOWDOWN = 32.0
+INTERPRET_SLOWDOWN = 256.0
+
+# Fixed dispatch/launch latency expressed in equivalent bytes (~100us at
+# ~tens of GB/s).  Small problems are overhead-bound, where the byte streams
+# cannot separate candidates — adding the constant makes their estimates
+# near-tied so pruning keeps them all and the measured search decides.  At
+# scale the streams dominate and pruning bites, exactly where the paper's
+# bandwidth models are predictive.
+OVERHEAD_BYTES = 4 * 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One point of the search space; params is a sorted tuple of pairs so
+    the dataclass stays hashable (dict-valued params would not be)."""
+
+    fmt: str  # csr | sell | sell_blocked | bcsr
+    impl: str  # scalar | vector | ref | pallas
+    params: tuple = ()
+
+    @property
+    def param_dict(self) -> dict[str, Any]:
+        return dict(self.params)
+
+    def key(self) -> str:
+        if not self.params:
+            return f"{self.fmt}/{self.impl}"
+        inner = ",".join(f"{k}={v}" for k, v in self.params)
+        return f"{self.fmt}/{self.impl}[{inner}]"
+
+
+def make(fmt: str, impl: str, **params: Any) -> Candidate:
+    norm = tuple(
+        sorted((k, tuple(v) if isinstance(v, list) else v) for k, v in params.items())
+    )
+    return Candidate(fmt, impl, norm)
+
+
+def enumerate_candidates(
+    feats: MatrixFeatures,
+    kind: str = "spmv",
+    *,
+    sigmas: Iterable[int] = SELL_SIGMAS,
+    bcsr_blocks: Iterable[tuple[int, int]] = BCSR_BLOCKS,
+    chunk_tiles: Iterable[int] = (8, 16),
+    include_scalar: bool = True,
+    include_pallas: bool = True,
+) -> list[Candidate]:
+    """The format x impl x params cross-product for one matrix.
+
+    SELL and the scalar tier only exist for SpMV (kind="spmv"); SpMM
+    (kind="spmm") contrasts CSR gather/segment-sum with the Table 2 BCSR
+    shapes.  Column-slabbed SELL variants are enumerated only when the x
+    footprint exceeds the VMEM budget (features.x_fits_vmem).
+    """
+    cands: list[Candidate] = [make("csr", "vector")]
+    if kind == "spmv":
+        if include_scalar:
+            cands.append(make("csr", "scalar"))
+        for sigma in sigmas:
+            cands.append(make("sell", "ref", C=8, sigma=sigma))
+            if include_pallas:
+                for ct in chunk_tiles:
+                    cands.append(
+                        make("sell", "pallas", C=8, sigma=sigma, chunk_tile=ct)
+                    )
+        if not feats.x_fits_vmem:
+            from repro.kernels.ops import VMEM_BUDGET_BYTES
+
+            n_slabs = max(2, -(-feats.x_bytes // VMEM_BUDGET_BYTES))
+            for sigma in sigmas:
+                cands.append(
+                    make("sell_blocked", "ref", C=8, sigma=sigma, n_slabs=n_slabs)
+                )
+                if include_pallas:
+                    cands.append(
+                        make(
+                            "sell_blocked",
+                            "pallas",
+                            C=8,
+                            sigma=sigma,
+                            n_slabs=n_slabs,
+                            chunk_tile=8,
+                        )
+                    )
+    for block in bcsr_blocks:
+        cands.append(make("bcsr", "ref", block=tuple(block)))
+        if include_pallas:
+            cands.append(make("bcsr", "pallas", block=tuple(block)))
+    return cands
+
+
+# ---------------------------------------------------------------------------
+# Byte-model cost estimate (paper §4.2, generalized per format)
+# ---------------------------------------------------------------------------
+def sell_padded_slots(
+    lengths: np.ndarray, C: int, sigma: int, width_align: int = 8
+) -> int:
+    """Stored slots (incl. padding) of sell_from_csr for these row lengths.
+
+    Mirrors formats.sell_from_csr exactly: rows sorted by descending length
+    within sigma-windows, chunks of C rows, all chunks padded to the global
+    max width rounded up to width_align.
+    """
+    m = lengths.size
+    if m == 0:
+        return 0
+    window = np.arange(m) // sigma
+    # lexsort: primary key window, secondary descending length — the same
+    # multiset per window as the per-window argsort in sell_from_csr.
+    sorted_len = lengths[np.lexsort((-lengths, window))]
+    n_chunks = -(-m // C)
+    padded = np.zeros(n_chunks * C, dtype=np.int64)
+    padded[:m] = sorted_len
+    W = int(max(padded.reshape(n_chunks, C).max(axis=1).max(initial=1), 1))
+    if width_align > 1:
+        W = -(-W // width_align) * width_align
+    return n_chunks * C * W
+
+
+def bcsr_block_count(a: CSRMatrix, block: tuple[int, int]) -> int:
+    """Number of occupied (bm, bk) blocks — no block materialization."""
+    if a.nnz == 0:
+        return 0
+    bm, bk = block
+    rows = np.repeat(np.arange(a.shape[0], dtype=np.int64), np.diff(a.indptr))
+    gn = -(-a.shape[1] // bk)
+    key = (rows // bm) * gn + a.indices.astype(np.int64) // bk
+    return int(np.unique(key).size)
+
+
+def estimate_cost(
+    a: CSRMatrix,
+    cand: Candidate,
+    feats: MatrixFeatures,
+    *,
+    k: int = 1,
+    val_bytes: int = 4,
+    idx_bytes: int = 4,
+    on_cpu: bool | None = None,
+) -> float:
+    """Abstract cost (bytes x impl slowdown) of running this candidate.
+
+    Only relative magnitudes matter: prune() compares candidates against the
+    cheapest estimate for the same matrix.
+    """
+    if on_cpu is None:
+        from repro.kernels.ops import on_cpu as _on_cpu
+
+        on_cpu = _on_cpu()
+    m, n = a.shape
+    p = cand.param_dict
+    if cand.fmt == "csr":
+        bytes_ = (
+            spmv_app_bytes(m, n, a.nnz, val_bytes, idx_bytes)
+            if k == 1
+            else spmm_app_bytes(m, n, a.nnz, k, val_bytes, idx_bytes)
+        )
+    elif cand.fmt in ("sell", "sell_blocked"):
+        lengths = np.diff(a.indptr).astype(np.int64)
+        slots = sell_padded_slots(lengths, int(p["C"]), int(p["sigma"]))
+        bytes_ = (
+            slots * (val_bytes + idx_bytes)  # padded cols+vals streams
+            + (m + n) * k * val_bytes  # x in, y out
+            + m * idx_bytes  # row_perm
+        )
+        if cand.fmt == "sell_blocked":
+            # Slab splitting re-pads each slab to its own width; small
+            # overhead on top of the whole-matrix estimate.
+            bytes_ = int(bytes_ * 1.15)
+    elif cand.fmt == "bcsr":
+        bm, bk = p["block"]
+        n_blocks = bcsr_block_count(a, (int(bm), int(bk)))
+        bytes_ = (
+            n_blocks * (bm * bk * val_bytes + 2 * idx_bytes)  # fill-in stored
+            + (m + n) * k * val_bytes
+        )
+    else:  # pragma: no cover - enumeration and cost stay in sync
+        raise ValueError(f"unknown candidate format: {cand.fmt}")
+
+    slowdown = 1.0
+    if cand.impl == "scalar":
+        slowdown = SCALAR_SLOWDOWN
+    elif cand.impl == "pallas" and on_cpu:
+        slowdown = INTERPRET_SLOWDOWN
+    return (float(bytes_) + OVERHEAD_BYTES) * slowdown
+
+
+def prune(
+    costs: dict[Candidate, float], factor: float = DEFAULT_PRUNE_FACTOR
+) -> list[Candidate]:
+    """Keep candidates within ``factor`` of the cheapest estimate.
+
+    The cheapest candidate always survives, so the measured search is never
+    left with an empty slate.
+    """
+    if not costs:
+        return []
+    best = min(costs.values())
+    return [c for c, est in costs.items() if est <= factor * best]

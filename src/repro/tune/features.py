@@ -1,0 +1,55 @@
+"""Per-matrix structural features driving candidate enumeration and pruning.
+
+These are exactly the quantities the paper shows to predict kernel choice:
+UCLD predicts the vgatherd/SELL win (Fig 5), block fill economics drive the
+Table 2 register-blocking choice, nnz/row dispersion drives load balancing,
+and the x-vector footprint against the VMEM budget decides whether the SELL
+kernel needs column-slab cache blocking (Nishtala et al. in the paper's
+references).  All are O(nnz) numpy on the host CSR.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.formats import CSRMatrix
+from repro.core.metrics import matrix_bandwidth, ucld, utd
+
+__all__ = ["MatrixFeatures", "extract"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MatrixFeatures:
+    m: int
+    n: int
+    nnz: int
+    nnz_row_mean: float
+    nnz_row_cv: float  # std/mean of nnz per row (load-imbalance proxy)
+    ucld: float  # paper Fig 5 predictor
+    utd: float  # TPU tile generalization of UCLD
+    bandwidth: int  # max |i - j| over nonzeros
+    x_bytes: int  # footprint of the dense operand (k columns)
+    x_fits_vmem: bool
+
+
+def extract(a: CSRMatrix, *, k: int = 1, val_bytes: int = 4) -> MatrixFeatures:
+    from repro.kernels.ops import VMEM_BUDGET_BYTES
+
+    m, n = a.shape
+    lengths = np.diff(a.indptr).astype(np.float64)
+    mean = float(lengths.mean()) if m else 0.0
+    cv = float(lengths.std() / mean) if mean > 0 else 0.0
+    x_bytes = int(n) * int(k) * val_bytes
+    return MatrixFeatures(
+        m=m,
+        n=n,
+        nnz=a.nnz,
+        nnz_row_mean=mean,
+        nnz_row_cv=cv,
+        ucld=ucld(a),
+        utd=utd(a),
+        bandwidth=matrix_bandwidth(a),
+        x_bytes=x_bytes,
+        x_fits_vmem=x_bytes <= VMEM_BUDGET_BYTES,
+    )

@@ -1,0 +1,289 @@
+"""The SparseOperator facade: one object wrapping prepare + dispatch.
+
+    from repro.tune import SparseOperator
+    op = SparseOperator.build(csr)      # autotuned (plan-cached) SpMV
+    y = op @ x
+
+``build`` runs the paper's whole selection pipeline: extract structural
+features, enumerate the format x impl x params cross-product, prune it with
+the byte-model cost estimate, time the survivors with the benchmark timer,
+persist the winning :class:`~repro.tune.plan.Plan` in the JSON plan cache
+(keyed by structure fingerprint, so a rebuild skips the search), and return
+an operator holding the prepared device arrays for the winning candidate.
+
+``core.spmv.spmv``/``spmm`` remain as the thin low-level dispatch for code
+that already holds prepared format dicts; everything user-facing goes
+through this facade.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import CSRMatrix, bcsr_from_csr, sell_from_csr
+from repro.core.spmv import (
+    spmm_bcsr_dense,
+    spmm_csr,
+    spmv_csr,
+    spmv_csr_scalar,
+    spmv_sell,
+)
+
+from .candidates import Candidate, enumerate_candidates, estimate_cost, prune
+from .candidates import DEFAULT_PRUNE_FACTOR
+from .features import MatrixFeatures, extract
+from .plan import Plan, PlanCache, default_cache, fingerprint
+from .timing import time_fn
+
+__all__ = ["SparseOperator", "prepare", "runner"]
+
+
+# ---------------------------------------------------------------------------
+# Prepare + dispatch per candidate
+# ---------------------------------------------------------------------------
+def prepare(a: CSRMatrix, cand: Candidate) -> dict[str, Any]:
+    """Host-side format construction for one candidate."""
+    from repro.kernels import ops as kops
+
+    p = cand.param_dict
+    if cand.fmt == "csr":
+        return {"dev": a.device()}
+    if cand.fmt == "sell":
+        return kops.sell_prepare(
+            sell_from_csr(a, C=int(p["C"]), sigma=int(p["sigma"]), width_align=8),
+            int(p.get("chunk_tile", 8)),
+        )
+    if cand.fmt == "sell_blocked":
+        return kops.sell_prepare_blocked(
+            a,
+            int(p["n_slabs"]),
+            chunk_tile=int(p.get("chunk_tile", 8)),
+            C=int(p["C"]),
+            sigma=int(p["sigma"]),
+        )
+    if cand.fmt == "bcsr":
+        return kops.bcsr_prepare(bcsr_from_csr(a, tuple(p["block"])))
+    raise ValueError(f"unknown candidate format: {cand.fmt}")
+
+
+def runner(
+    a: CSRMatrix, cand: Candidate, prep: dict[str, Any], *, k: int = 1
+) -> Callable[[jax.Array], jax.Array]:
+    """Bind a candidate + prepared arrays into ``fn(x) -> y``.
+
+    k == 1 binds the SpMV path (x is (n,)); k > 1 binds SpMM (x is (n, k)).
+    """
+    from repro.kernels import ops as kops
+
+    m, n = a.shape
+    if cand.fmt == "csr":
+        dev = prep["dev"]
+        if k == 1:
+            fn = spmv_csr_scalar if cand.impl == "scalar" else spmv_csr
+            return lambda x: fn(dev, x, n_rows=m)
+        if cand.impl == "scalar":
+            raise ValueError("csr/scalar has no SpMM tier (k > 1)")
+        return lambda x: spmm_csr(dev, x, n_rows=m)
+
+    if cand.fmt == "sell":
+        if cand.impl == "pallas":
+            return lambda x: kops.sell_spmv(prep, x)
+        dev = {key: prep[key] for key in ("cols", "vals", "row_perm")}
+        return lambda x: spmv_sell(dev, x, n_rows=m)
+
+    if cand.fmt == "sell_blocked":
+        if cand.impl == "pallas":
+            return lambda x: kops.sell_spmv_blocked(prep, x)
+        slabs = [
+            {key: slab[key] for key in ("cols", "vals", "row_perm")}
+            for slab in prep["slabs"]
+        ]
+        bounds = [int(b) for b in prep["bounds"]]
+
+        def fn(x):
+            y = jnp.zeros((m,), x.dtype)
+            for s, dev in enumerate(slabs):
+                y = y + spmv_sell(dev, x[bounds[s] : bounds[s + 1]], n_rows=m)
+            return y
+
+        return jax.jit(fn)
+
+    if cand.fmt == "bcsr":
+        gm, gn = prep["grid_shape"]
+        bm, bk = prep["block_shape"]
+        if cand.impl == "pallas":
+            if k == 1:
+                return lambda x: kops.bcsr_spmm(prep, x[:, None], n_tile=1)[:, 0]
+            return lambda x: kops.bcsr_spmm(prep, x, n_tile=min(128, k))
+        dev = {key: prep[key] for key in ("blocks", "block_cols", "block_rows")}
+
+        def fn(x):
+            x2 = x[:, None] if x.ndim == 1 else x
+            kk = x2.shape[-1]
+            xp = jnp.zeros((gn * bk, kk), x2.dtype).at[:n].set(x2)
+            out = spmm_bcsr_dense(dev, xp.reshape(gn, bk, kk), n_block_rows=gm)
+            out = out.reshape(gm * bm, kk)[:m]
+            return out[:, 0] if x.ndim == 1 else out
+
+        return jax.jit(fn)
+
+    raise ValueError(f"unknown candidate format: {cand.fmt}")
+
+
+# ---------------------------------------------------------------------------
+# The facade
+# ---------------------------------------------------------------------------
+class SparseOperator:
+    """An autotuned sparse linear operator: ``y = op @ x``."""
+
+    def __init__(
+        self,
+        a: CSRMatrix,
+        plan: Plan,
+        prep: dict[str, Any],
+        *,
+        from_cache: bool,
+        features: MatrixFeatures | None = None,
+        measurements: dict[str, float] | None = None,
+    ):
+        self.a = a
+        self.plan = plan
+        self.shape = a.shape
+        self.from_cache = from_cache  # True -> the measured search was skipped
+        self.features = features
+        self.measurements = dict(measurements or {})  # candidate key -> seconds
+        self._prep = prep
+        self._run = runner(a, plan.candidate, prep, k=plan.k)
+        self._csr_dev: dict | None = prep.get("dev")  # fallback path, lazy
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def build(
+        cls,
+        a: CSRMatrix,
+        *,
+        k: int | None = None,
+        cache: PlanCache | None = None,
+        candidates: Iterable[Candidate] | None = None,
+        prune_factor: float = DEFAULT_PRUNE_FACTOR,
+        warmup: int = 1,
+        timed: int = 3,
+        force_search: bool = False,
+        seed: int = 0,
+    ) -> "SparseOperator":
+        """Autotune (or fetch the cached plan for) this matrix.
+
+        k=None tunes SpMV; k=<width> tunes SpMM with a (n, k) operand.
+        ``candidates`` overrides enumeration (pruning still applies);
+        ``force_search`` ignores a cached plan and re-times.
+        """
+        kind = "spmv" if k is None else "spmm"
+        kk = 1 if k is None else int(k)
+        fp = fingerprint(a)
+        cache = default_cache() if cache is None else cache
+        if not force_search:
+            plan = cache.get(fp, kind, kk)
+            if plan is not None:
+                return cls(a, plan, prepare(a, plan.candidate), from_cache=True)
+
+        feats = extract(a, k=kk)
+        if candidates is None:
+            cands = enumerate_candidates(feats, kind)
+        else:
+            cands = list(candidates)
+        costs = {c: estimate_cost(a, c, feats, k=kk) for c in cands}
+        survivors = prune(costs, factor=prune_factor)
+
+        rng = np.random.default_rng(seed)
+        shape = (a.shape[1],) if kk == 1 else (a.shape[1], kk)
+        x = jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+        measurements: dict[str, float] = {}
+        best: tuple[float, Candidate, dict] | None = None
+        for c in survivors:
+            prep = prepare(a, c)
+            t = time_fn(runner(a, c, prep, k=kk), x, warmup=warmup, timed=timed)
+            measurements[c.key()] = t
+            if best is None or t < best[0]:
+                best = (t, c, prep)
+        assert best is not None, "pruning left no candidates"
+        t_best, c_best, prep_best = best
+        plan = Plan(
+            fingerprint=fp,
+            kind=kind,
+            fmt=c_best.fmt,
+            impl=c_best.impl,
+            params={kp: list(v) if isinstance(v, tuple) else v
+                    for kp, v in c_best.params},
+            est_cost=costs[c_best],
+            measured_s=t_best,
+            n_candidates=len(cands),
+            n_measured=len(survivors),
+            k=kk,
+        )
+        cache.put(plan)
+        return cls(
+            a,
+            plan,
+            prep_best,
+            from_cache=False,
+            features=feats,
+            measurements=measurements,
+        )
+
+    @classmethod
+    def from_candidate(
+        cls, a: CSRMatrix, cand: Candidate, *, k: int | None = None
+    ) -> "SparseOperator":
+        """Build with a forced candidate — no search, no cache.
+
+        Benchmarks use this to pin each fixed configuration (e.g. Fig 4's
+        scalar tier, Table 2's block shapes) while still going through the
+        facade's prepare + dispatch path.  k picks the SpMM path as in
+        ``build``.
+        """
+        kk = 1 if k is None else int(k)
+        plan = Plan(
+            fingerprint=fingerprint(a),
+            kind="spmv" if kk == 1 else "spmm",
+            fmt=cand.fmt,
+            impl=cand.impl,
+            params={kp: list(v) if isinstance(v, tuple) else v
+                    for kp, v in cand.params},
+            est_cost=0.0,
+            measured_s=0.0,
+            n_candidates=1,
+            n_measured=0,
+            k=kk,
+        )
+        return cls(a, plan, prepare(a, cand), from_cache=False)
+
+    # -- application --------------------------------------------------------
+    def __matmul__(self, x: jax.Array) -> jax.Array:
+        x = jnp.asarray(x)
+        if x.ndim == 1:
+            if self.plan.k == 1:
+                return self._run(x)
+            return spmv_csr(self._csr_fallback(), x, n_rows=self.shape[0])
+        if self.plan.k > 1:
+            return self._run(x)
+        # spmv-tuned operator applied to a matrix: CSR fallback (documented).
+        return spmm_csr(self._csr_fallback(), x, n_rows=self.shape[0])
+
+    def matvec(self, x: jax.Array) -> jax.Array:
+        return self @ x
+
+    def _csr_fallback(self) -> dict:
+        if self._csr_dev is None:
+            self._csr_dev = self.a.device()
+        return self._csr_dev
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        src = "cache" if self.from_cache else "search"
+        return (
+            f"SparseOperator({self.shape[0]}x{self.shape[1]}, "
+            f"nnz={self.a.nnz}, plan={self.plan.candidate.key()}, from {src})"
+        )

@@ -1,0 +1,140 @@
+"""Plans and the JSON plan cache.
+
+A :class:`Plan` is the durable result of one measured search: which
+(format, impl, params) won for one matrix structure, with enough bookkeeping
+to audit the decision (estimated cost, measured time, how many candidates
+were enumerated vs actually timed).
+
+The cache key is a *structure fingerprint* — sha256 over shape, dtype and
+the indptr/indices byte streams.  Values are deliberately excluded: the
+paper's phenomena (UCLD, fill ratio, row-length dispersion) depend only on
+the pattern, so two matrices with the same pattern share the optimal plan
+and a value update (e.g. a new timestep of the same mesh) hits the cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Any
+
+import numpy as np
+
+from repro.core.formats import CSRMatrix
+
+from .candidates import Candidate, make
+
+__all__ = ["PLAN_VERSION", "Plan", "PlanCache", "fingerprint", "default_cache"]
+
+PLAN_VERSION = 1
+
+_ENV_CACHE = "REPRO_TUNE_CACHE"
+_DEFAULT_CACHE = "~/.cache/repro_tune/plans.json"
+
+
+def fingerprint(a: CSRMatrix) -> str:
+    """Structure-only fingerprint: shape + dtype + indptr/indices bytes."""
+    h = hashlib.sha256()
+    h.update(repr((tuple(a.shape), a.nnz, str(a.data.dtype))).encode())
+    h.update(np.ascontiguousarray(a.indptr).tobytes())
+    h.update(np.ascontiguousarray(a.indices).tobytes())
+    return h.hexdigest()[:16]
+
+
+@dataclasses.dataclass
+class Plan:
+    fingerprint: str
+    kind: str  # "spmv" | "spmm"
+    fmt: str
+    impl: str
+    params: dict[str, Any]
+    est_cost: float
+    measured_s: float
+    n_candidates: int  # enumerated
+    n_measured: int  # survived pruning and were timed
+    k: int = 1  # dense-operand width (1 for spmv)
+    version: int = PLAN_VERSION
+
+    @property
+    def candidate(self) -> Candidate:
+        return make(self.fmt, self.impl, **self.params)
+
+    def to_json(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict[str, Any]) -> "Plan":
+        return cls(**d)
+
+
+class PlanCache:
+    """In-memory plan store with optional JSON persistence.
+
+    ``PlanCache()`` is memory-only (one process); ``PlanCache(path)`` loads
+    the JSON file if present and rewrites it atomically on every put.
+    """
+
+    def __init__(self, path: str | os.PathLike | None = None):
+        self.path = Path(path).expanduser() if path else None
+        self._plans: dict[str, dict] = {}
+        if self.path is not None and self.path.exists():
+            try:
+                self._plans = json.loads(self.path.read_text())
+            except (json.JSONDecodeError, OSError):
+                self._plans = {}  # corrupt cache: start over, never crash
+
+    @staticmethod
+    def _key(fp: str, kind: str, k: int = 1) -> str:
+        return f"{fp}:{kind}:k{k}"
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def get(self, fp: str, kind: str, k: int = 1) -> Plan | None:
+        d = self._plans.get(self._key(fp, kind, k))
+        if d is None or d.get("version") != PLAN_VERSION:
+            return None
+        try:
+            return Plan.from_json(d)
+        except TypeError:
+            # Entry shape drifted (hand edit, or a field change without a
+            # version bump): treat as a miss, never crash.
+            return None
+
+    def put(self, plan: Plan) -> None:
+        self._plans[self._key(plan.fingerprint, plan.kind, plan.k)] = plan.to_json()
+        if self.path is not None:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            # Merge-then-replace so concurrent processes sharing the file
+            # don't clobber plans persisted since our load (ours win ties).
+            try:
+                on_disk = json.loads(self.path.read_text())
+                if isinstance(on_disk, dict):
+                    self._plans = {**on_disk, **self._plans}
+            except (FileNotFoundError, json.JSONDecodeError, OSError):
+                pass
+            fd, tmp = tempfile.mkstemp(
+                dir=self.path.parent, prefix=self.path.name, suffix=".tmp"
+            )
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(self._plans, f, indent=1, sort_keys=True)
+                os.replace(tmp, self.path)
+            except BaseException:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
+                raise
+
+
+_default: PlanCache | None = None
+
+
+def default_cache() -> PlanCache:
+    """Process-wide cache at $REPRO_TUNE_CACHE or ~/.cache/repro_tune/."""
+    global _default
+    if _default is None:
+        _default = PlanCache(os.environ.get(_ENV_CACHE, _DEFAULT_CACHE))
+    return _default

@@ -70,9 +70,10 @@ def test_ef_compressed_psum_reduces_and_feeds_back_error():
     print(run_with_devices("""
         import numpy as np, jax, jax.numpy as jnp, functools
         from jax.sharding import PartitionSpec as P
+        from repro.core.compat import shard_map
         from repro.optim.compress import ef_compressed_psum
         mesh = jax.make_mesh((8,), ("d",))
-        @functools.partial(jax.shard_map, mesh=mesh, in_specs=(P("d"), P("d")),
+        @functools.partial(shard_map, mesh=mesh, in_specs=(P("d"), P("d")),
                            out_specs=(P("d"), P("d")))
         def allred(g, e):
             out, e2 = ef_compressed_psum(g[0], e[0], "d")

@@ -1,0 +1,119 @@
+"""Edge cases for the kernel prep/dispatch layers, all against the dense
+oracle: empty matrices and trailing empty rows (_rows_from_indptr), column
+slabs that receive zero nonzeros (sell_prepare_blocked), all-empty block
+rows (bcsr_prepare) — plus the regression test that the vectorized
+searchsorted slab split equals the original python row loop."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import bcsr_from_csr, csr_from_dense
+from repro.core.spmv import _rows_from_indptr, spmv_csr, spmv_csr_scalar
+from repro.kernels import ops as kops
+
+
+# ---------------------------------------------------------------------------
+# _rows_from_indptr
+# ---------------------------------------------------------------------------
+def test_rows_from_indptr_empty_matrix():
+    a = csr_from_dense(np.zeros((5, 7), np.float32))
+    rows = _rows_from_indptr(jnp.asarray(a.indptr), 0, 5)
+    assert rows.shape == (0,)
+    x = np.ones(7, np.float32)
+    for fn in (spmv_csr, spmv_csr_scalar):
+        y = np.asarray(fn(a.device(), jnp.asarray(x), n_rows=5))
+        np.testing.assert_allclose(y, np.zeros(5), err_msg=fn.__name__)
+
+
+def test_rows_from_indptr_trailing_empty_rows():
+    d = np.zeros((6, 4), np.float32)
+    d[0, 1] = 2.0
+    d[2, 3] = -1.0  # rows 1, 3, 4, 5 empty; trailing run of empties
+    a = csr_from_dense(d)
+    rows = np.asarray(_rows_from_indptr(jnp.asarray(a.indptr), a.nnz, 6))
+    np.testing.assert_array_equal(rows, [0, 2])
+    x = np.arange(1, 5, dtype=np.float32)
+    for fn in (spmv_csr, spmv_csr_scalar):
+        y = np.asarray(fn(a.device(), jnp.asarray(x), n_rows=6))
+        np.testing.assert_allclose(y, d @ x, atol=1e-5, err_msg=fn.__name__)
+
+
+# ---------------------------------------------------------------------------
+# sell_prepare_blocked with empty slabs
+# ---------------------------------------------------------------------------
+def test_sell_blocked_slabs_with_zero_nonzeros():
+    rng = np.random.default_rng(0)
+    d = np.zeros((32, 64), np.float32)
+    # All nonzeros in the first 16 columns -> slabs 2..4 of 4 are empty.
+    d[:, :16] = ((rng.random((32, 16)) < 0.3)
+                 * rng.standard_normal((32, 16))).astype(np.float32)
+    a = csr_from_dense(d)
+    x = rng.standard_normal(64).astype(np.float32)
+    prep = kops.sell_prepare_blocked(a, n_slabs=4)
+    y = np.asarray(kops.sell_spmv_blocked(prep, jnp.asarray(x)))
+    np.testing.assert_allclose(y, d @ x, atol=1e-4)
+
+
+def test_sell_blocked_fully_empty_matrix():
+    a = csr_from_dense(np.zeros((16, 24), np.float32))
+    prep = kops.sell_prepare_blocked(a, n_slabs=3)
+    y = np.asarray(kops.sell_spmv_blocked(prep, jnp.ones(24, jnp.float32)))
+    np.testing.assert_allclose(y, np.zeros(16))
+
+
+# ---------------------------------------------------------------------------
+# bcsr_prepare with all-empty block rows
+# ---------------------------------------------------------------------------
+def test_bcsr_prepare_all_empty_block_rows():
+    d = np.zeros((16, 16), np.float32)
+    a = csr_from_dense(d)
+    b = bcsr_from_csr(a, (8, 8))
+    assert b.n_blocks == 0
+    prep = kops.bcsr_prepare(b)
+    # Every block row got one explicit zero fill-in block.
+    assert prep["blocks"].shape[0] == 2
+    X = np.random.default_rng(1).standard_normal((16, 4)).astype(np.float32)
+    out = np.asarray(kops.bcsr_spmm(prep, jnp.asarray(X), n_tile=4))
+    np.testing.assert_allclose(out, np.zeros((16, 4)))
+
+
+def test_bcsr_prepare_some_empty_block_rows_vs_dense():
+    rng = np.random.default_rng(2)
+    d = np.zeros((40, 24), np.float32)
+    # Rows 8..15 and 32..39 stay all-zero -> block rows 1 and 4 empty (bm=8).
+    for r0 in (0, 16, 24):
+        d[r0 : r0 + 8] = ((rng.random((8, 24)) < 0.4)
+                          * rng.standard_normal((8, 24))).astype(np.float32)
+    a = csr_from_dense(d)
+    b = bcsr_from_csr(a, (8, 8))
+    gm, _ = b.grid_shape
+    assert len(np.unique(b.block_rows)) < gm  # some block rows are empty
+    prep = kops.bcsr_prepare(b)
+    X = rng.standard_normal((24, 8)).astype(np.float32)
+    out = np.asarray(kops.bcsr_spmm(prep, jnp.asarray(X), n_tile=8))
+    np.testing.assert_allclose(out, d @ X, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized slab split == original row loop
+# ---------------------------------------------------------------------------
+def test_sell_prepare_blocked_vectorized_matches_loop():
+    rng = np.random.default_rng(3)
+    d = ((rng.random((48, 96)) < 0.12) * rng.standard_normal((48, 96))).astype(
+        np.float32
+    )
+    d[10:20] = 0.0  # a run of empty rows
+    d[:, 60:] = 0.0  # empty trailing slabs
+    a = csr_from_dense(d)
+    for n_slabs in (1, 3, 5):
+        fast = kops.sell_prepare_blocked(a, n_slabs, chunk_tile=8, C=8, sigma=16)
+        slow = kops._sell_prepare_blocked_loop(a, n_slabs, chunk_tile=8, C=8,
+                                               sigma=16)
+        np.testing.assert_array_equal(fast["bounds"], slow["bounds"])
+        assert fast["shape"] == slow["shape"]
+        assert len(fast["slabs"]) == len(slow["slabs"])
+        for s, (fs, ss) in enumerate(zip(fast["slabs"], slow["slabs"])):
+            for key in ("cols", "vals", "row_perm"):
+                np.testing.assert_array_equal(
+                    np.asarray(fs[key]), np.asarray(ss[key]),
+                    err_msg=f"slab {s} key {key} (n_slabs={n_slabs})",
+                )

@@ -1,0 +1,137 @@
+"""repro.tune: plan-cache round-trip, cost-model pruning safety, and
+SparseOperator correctness for every candidate plan."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.formats import csr_from_dense
+from repro.data.suite import generate
+from repro.tune import (
+    PlanCache,
+    SparseOperator,
+    enumerate_candidates,
+    estimate_cost,
+    extract,
+    fingerprint,
+    prepare,
+    prune,
+    runner,
+    time_fn,
+)
+
+
+def small_csr(seed=0, m=96, n=96, density=0.08):
+    rng = np.random.default_rng(seed)
+    d = ((rng.random((m, n)) < density) * rng.standard_normal((m, n))).astype(
+        np.float32
+    )
+    return d, csr_from_dense(d)
+
+
+# ---------------------------------------------------------------------------
+# Fingerprint + plan cache
+# ---------------------------------------------------------------------------
+def test_fingerprint_stable_and_structure_only():
+    d, a = small_csr()
+    assert fingerprint(a) == fingerprint(a)
+    # Same pattern, different values -> same fingerprint (plans transfer).
+    b = csr_from_dense(d)
+    b.data = b.data * 3.0
+    assert fingerprint(b) == fingerprint(a)
+    # Different pattern -> different fingerprint.
+    d2 = d.copy()
+    d2[0, :5] = 1.0
+    assert fingerprint(csr_from_dense(d2)) != fingerprint(a)
+
+
+def test_plan_cache_roundtrip_and_hit_skips_timing(tmp_path):
+    path = tmp_path / "plans.json"
+    d, a = small_csr(seed=1)
+    op = SparseOperator.build(a, cache=PlanCache(path), warmup=0, timed=1)
+    assert not op.from_cache
+    assert op.plan.n_measured >= 1
+    assert op.measurements  # the search actually timed candidates
+
+    # Fresh cache object re-reads the JSON file: round-trip through disk.
+    op2 = SparseOperator.build(a, cache=PlanCache(path), warmup=0, timed=1)
+    assert op2.from_cache
+    assert op2.measurements == {}  # cache hit ran no timing at all
+    assert op2.plan.candidate == op.plan.candidate
+    assert op2.plan.fingerprint == fingerprint(a)
+
+    x = np.random.default_rng(2).standard_normal(a.shape[1]).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(op2 @ jnp.asarray(x)), d @ x, atol=1e-3
+    )
+
+
+def test_force_search_ignores_cache(tmp_path):
+    _, a = small_csr(seed=2)
+    cache = PlanCache(tmp_path / "plans.json")
+    SparseOperator.build(a, cache=cache, warmup=0, timed=1)
+    op = SparseOperator.build(
+        a, cache=cache, warmup=0, timed=1, force_search=True
+    )
+    assert not op.from_cache
+
+
+# ---------------------------------------------------------------------------
+# Cost-model pruning never drops the measured-best candidate
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["cant", "scircuit", "shallow_water1"])
+def test_pruning_keeps_measured_best(name):
+    a = generate(name, scale=1 / 256)
+    feats = extract(a)
+    cands = enumerate_candidates(feats)
+    costs = {c: estimate_cost(a, c, feats) for c in cands}
+    survivors = set(prune(costs))
+
+    x = jnp.asarray(
+        np.random.default_rng(0).standard_normal(a.shape[1]).astype(np.float32)
+    )
+    measured = {}
+    for c in cands:
+        fn = runner(a, c, prepare(a, c))
+        measured[c] = time_fn(fn, x, warmup=1, timed=2)
+    best = min(measured, key=measured.get)
+    assert best in survivors, (
+        f"pruning dropped the measured-best candidate {best.key()} "
+        f"(survivors: {sorted(c.key() for c in survivors)})"
+    )
+
+
+# ---------------------------------------------------------------------------
+# SparseOperator matches the CSR oracle for every candidate plan
+# ---------------------------------------------------------------------------
+def test_operator_matches_oracle_for_every_spmv_candidate():
+    d, a = small_csr(seed=3, m=100, n=80, density=0.1)  # non-square
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal(80).astype(np.float32)
+    ref = d @ x
+    for cand in enumerate_candidates(extract(a)):
+        op = SparseOperator.from_candidate(a, cand)
+        got = np.asarray(op @ jnp.asarray(x))
+        np.testing.assert_allclose(got, ref, atol=2e-3, err_msg=cand.key())
+
+
+def test_operator_matches_oracle_for_every_spmm_candidate():
+    k = 16
+    d, a = small_csr(seed=5, m=64, n=96, density=0.15)
+    rng = np.random.default_rng(6)
+    X = rng.standard_normal((96, k)).astype(np.float32)
+    ref = d @ X
+    for cand in enumerate_candidates(extract(a, k=k), kind="spmm"):
+        op = SparseOperator.from_candidate(a, cand, k=k)
+        got = np.asarray(op @ jnp.asarray(X))
+        np.testing.assert_allclose(got, ref, atol=5e-3, err_msg=cand.key())
+
+
+def test_built_operator_matches_oracle_spmv_and_spmm_fallback():
+    d, a = small_csr(seed=7)
+    op = SparseOperator.build(a, cache=PlanCache(), warmup=0, timed=1)
+    rng = np.random.default_rng(8)
+    x = rng.standard_normal(a.shape[1]).astype(np.float32)
+    X = rng.standard_normal((a.shape[1], 4)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(op @ jnp.asarray(x)), d @ x, atol=1e-3)
+    # spmv-tuned operator applied to a matrix: documented CSR fallback.
+    np.testing.assert_allclose(np.asarray(op @ jnp.asarray(X)), d @ X, atol=1e-3)
