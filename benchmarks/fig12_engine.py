@@ -1,0 +1,128 @@
+"""SparseEngine under offered load vs the fixed k=1 sequential path.
+
+Not a figure from the paper — it extends Fig 9's SpMV->SpMM amortization to
+the serving runtime: the engine aggregates pending requests into k-bucketed
+SpMM batches (k in {1, 4, 16, 64}, rounded up with padding) and dispatches
+the plan tuned per bucket, while the baseline serves the same requests one
+at a time through the k=1 plan.  Per (matrix, offered load) the row reports:
+
+  req_s        engine throughput at that offered load
+  seq_req_s    fixed k=1 sequential throughput on the same requests
+  speedup      req_s / seq_req_s (must exceed 1 at load >= 16 — the
+               crossover the paper's Fig 9 predicts)
+  occupancy    real columns / dispatched columns (bucket padding waste)
+  table_hit    whether a *restarted* engine loaded the whole k-indexed plan
+               table from the on-disk cache without re-searching (must be
+               True)
+
+Run standalone (``--smoke`` shrinks scale/loads for CI):
+
+  PYTHONPATH=src python -m benchmarks.fig12_engine [--smoke]
+"""
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.engine import SparseEngine
+from repro.tune import PlanCache
+
+from .common import row, suite
+
+MATRICES = ("cant", "scircuit", "pdb1HYS", "shallow_water1")
+LOADS = (1, 4, 16, 64)
+KS = (1, 4, 16, 64)
+SCALE = 1 / 64
+
+
+REPEATS = 3  # best-of, both paths — the paper's repeat-and-average discipline
+
+
+def _serve(eng: SparseEngine, xs) -> float:
+    """Drain ``xs`` as one offered-load burst; returns best wall seconds.
+
+    Stats reset per burst so ``eng.stats`` always describes exactly one
+    offered-load burst (the last), matching the timed workload.
+    """
+    best = float("inf")
+    for _ in range(REPEATS):
+        eng.stats = type(eng.stats)()
+        t0 = time.perf_counter()
+        for x in xs:
+            eng.submit(x)
+        eng.drain()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _sequential(eng: SparseEngine, xs) -> float:
+    op1 = eng.ops[1]
+    best = float("inf")
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        for x in xs:
+            y = op1 @ x
+        jax.block_until_ready(y)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(lines: list, *, smoke: bool = False) -> None:
+    scale = 1 / 256 if smoke else SCALE
+    loads = (1, 16, 64) if smoke else LOADS
+    mats = {name: suite(scale)[name] for name in MATRICES}
+    rng = np.random.default_rng(0)
+    crossover_ok = 0
+    with tempfile.TemporaryDirectory() as td:
+        for name, a in mats.items():
+            cache_path = Path(td) / f"{name}.json"
+            eng = SparseEngine(a, ks=KS, cache=PlanCache(cache_path),
+                               warmup=1, timed=3)
+            # Restart: a fresh engine over the same on-disk table must skip
+            # the measured search for every bucket.
+            eng = SparseEngine(a, ks=KS, cache=PlanCache(cache_path))
+            table_hit = eng.from_cache
+            xs = [jnp.asarray(rng.standard_normal(a.shape[1]).astype(np.float32))
+                  for _ in range(max(loads))]
+            _serve(eng, xs)  # compile every bucket outside the timed window
+            _sequential(eng, xs[:1])
+            beat_at_16 = None
+            for load in loads:
+                burst = xs[:load]
+                t_seq = _sequential(eng, burst)
+                t_eng = _serve(eng, burst)
+                s = eng.stats.summary()
+                speedup = t_seq / t_eng
+                if load >= 16:
+                    beat_at_16 = speedup if beat_at_16 is None else max(
+                        beat_at_16, speedup)
+                lines.append(row(
+                    f"fig12_{name}_load{load}", t_eng / load,
+                    f"req_s={load / t_eng:.1f};seq_req_s={load / t_seq:.1f};"
+                    f"speedup={speedup:.2f};occupancy={s['occupancy']:.2f};"
+                    f"by_bucket={s['by_bucket']};table_hit={table_hit}"))
+            assert table_hit, f"{name}: restarted engine re-searched plans"
+            if beat_at_16 is not None and beat_at_16 > 1.0:
+                crossover_ok += 1
+    if any(load >= 16 for load in loads):
+        assert crossover_ok >= 3, (
+            f"batched engine beat the sequential k=1 path at load >= 16 on "
+            f"only {crossover_ok}/{len(mats)} matrices (need >= 3)"
+        )
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small scale + fewer loads for CI")
+    args = ap.parse_args()
+    lines = ["name,us_per_call,derived"]
+    main(lines, smoke=args.smoke)
+    print("\n".join(lines))
+    print("# fig12 ok", file=sys.stderr)

@@ -27,6 +27,7 @@ def main() -> None:
         fig9_spmm,
         fig10_arch_comparison,
         fig11_autotune,
+        fig12_engine,
         table2_register_blocking,
     )
 
@@ -42,6 +43,7 @@ def main() -> None:
         "fig9": fig9_spmm,
         "fig10": fig10_arch_comparison,
         "fig11": fig11_autotune,
+        "fig12": fig12_engine,
     }
     only = set(args.only.split(",")) if args.only else None
     lines: list = ["name,us_per_call,derived"]

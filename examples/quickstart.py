@@ -22,6 +22,7 @@ from repro.core import (
 )
 from repro.data.suite import generate
 from repro.kernels import ops as kops
+from repro.runtime.engine import SparseEngine
 from repro.tune import PlanCache, SparseOperator
 
 
@@ -64,6 +65,18 @@ def main():
           f"(timed {op.plan.n_measured}/{op.plan.n_candidates} candidates, "
           f"rebuild from cache: {op2.from_cache}); "
           f"agrees {np.allclose(y, y_t, atol=1e-3)}")
+
+    # 6. the serving engine: pending SpMV requests aggregate into k-bucketed
+    #    SpMM batches, each bucket running its own tuned plan (Fig 9 as a
+    #    runtime decision)
+    eng = SparseEngine(a, ks=(1, 4, 16), cache=cache, warmup=1, timed=3)
+    reqs = [eng.submit(rng.standard_normal(n).astype(np.float32))
+            for _ in range(9)]
+    eng.drain()
+    s = eng.stats.summary()
+    print(f"  engine served {s['requests']} requests in {s['dispatches']} "
+          f"dispatch(es) {s['by_bucket']} at occupancy {s['occupancy']:.2f}; "
+          f"request 0 latency {reqs[0].latency_s * 1e3:.1f} ms")
 
 
 if __name__ == "__main__":

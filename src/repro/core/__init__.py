@@ -27,6 +27,7 @@ from .spmv import (  # noqa: F401
     spmm,
     spmm_bcsr_dense,
     spmm_csr,
+    spmm_sell,
     spmv,
     spmv_csr,
     spmv_csr_scalar,

@@ -25,12 +25,14 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from .compat import shard_map as _shard_map
 from .spmv import _rows_from_indptr
 
-__all__ = ["allgather_spmm", "ring_spmm", "local_spmm"]
+__all__ = ["allgather_spmm", "ring_spmm", "local_spmm", "stacked_spmm",
+           "assemble_rows"]
 
 
 def local_spmm(shard: dict[str, Any], x: jax.Array, n_rows: int) -> jax.Array:
@@ -38,6 +40,33 @@ def local_spmm(shard: dict[str, Any], x: jax.Array, n_rows: int) -> jax.Array:
     rows = _rows_from_indptr(shard["indptr"], shard["indices"].shape[0], n_rows)
     prod = shard["data"][:, None] * x[shard["indices"], :]
     return jax.ops.segment_sum(prod, rows, num_segments=n_rows)
+
+
+@jax.jit
+def stacked_spmm(stacked: dict[str, Any], x: jax.Array) -> jax.Array:
+    """Y_p = A_p @ X for every row shard, in ONE batched dispatch.
+
+    The stacked-RHS serving entry point: ``stacked`` is the padded per-shard
+    CSR pytree from :func:`core.partition.stack_csr_shards` (leading shard
+    dim P), ``x`` the full stacked RHS (n, k).  A single vmap over the shard
+    dim replaces P sequential kernel launches, so a batch-aggregating engine
+    can run row-partitioned shards under the same dispatch discipline as its
+    k-bucketed SpMM plans.  Returns (P, max_rows, k) padded row slabs; use
+    :func:`assemble_rows` to stitch the original row order back together.
+    """
+    n_rows = stacked["indptr"].shape[-1] - 1
+    shards = {key: stacked[key] for key in ("indptr", "indices", "data")}
+    return jax.vmap(lambda sh: local_spmm(sh, x, n_rows))(shards)
+
+
+def assemble_rows(ys: jax.Array, n_rows: Any) -> jax.Array:
+    """Concatenate (P, max_rows, k) padded shard outputs to (sum rows, k).
+
+    ``n_rows`` is the per-shard valid row count (host array, e.g. the
+    ``n_rows`` entry of ``stack_csr_shards`` or ``diff(RowPartition.bounds)``).
+    """
+    counts = [int(r) for r in np.asarray(n_rows)]
+    return jnp.concatenate([ys[p, :r] for p, r in enumerate(counts)], axis=0)
 
 
 def allgather_spmm(mesh, axis: str, stacked: dict[str, Any], x_sharded: jax.Array):

@@ -26,6 +26,7 @@ __all__ = [
     "spmm_csr",
     "spmv_csr_scalar",
     "spmv_sell",
+    "spmm_sell",
     "spmm_bcsr_dense",
     "spmv",
     "spmm",
@@ -95,6 +96,25 @@ def spmv_sell(sell: dict[str, Any], x: jax.Array, *, n_rows: int) -> jax.Array:
     )
 
 
+@functools.partial(jax.jit, static_argnames=("n_rows",))
+def spmm_sell(sell: dict[str, Any], x: jax.Array, *, n_rows: int) -> jax.Array:
+    """Y = A @ X with A in SELL-C-sigma and a stacked RHS X (n, k).
+
+    The k-dimension generalization of :func:`spmv_sell`: the chunk-local
+    dense gathers pull k columns at a time, amortizing the cols/vals streams
+    over the whole RHS batch (the paper's Fig 9 move applied to SELL).
+    """
+    cols, vals, row_perm = sell["cols"], sell["vals"], sell["row_perm"]
+    k = x.shape[-1]
+    # (..., W) slots gather (..., W, k) rows of X; reduce the W axis.
+    partial = (vals[..., None] * x[cols]).sum(axis=-2).reshape(-1, k)
+    y = jnp.zeros((n_rows, k), x.dtype)
+    valid = row_perm >= 0
+    return y.at[jnp.where(valid, row_perm, 0)].add(
+        jnp.where(valid[:, None], partial, 0.0)
+    )
+
+
 # ---------------------------------------------------------------------------
 # BCSR — dense-block einsum reference (kernel lives in kernels/bcsr_spmm)
 # ---------------------------------------------------------------------------
@@ -138,6 +158,8 @@ def spmv(fmt: str, mat: dict[str, Any], x: jax.Array, *, n_rows: int, impl: str 
 def spmm(fmt: str, mat: dict[str, Any], x: jax.Array, *, n_rows: int, impl: str = "vector"):
     if fmt == "csr":
         return spmm_csr(mat, x, n_rows=n_rows)
+    if fmt == "sell":
+        return spmm_sell(mat, x, n_rows=n_rows)
     if fmt == "bcsr":
         if impl == "pallas":
             from repro.kernels import ops as kops

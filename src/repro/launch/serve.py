@@ -1,17 +1,20 @@
-"""Serving launcher: batched LM decode, or autotuned sparse SpMV serving.
+"""Serving launcher: batched LM decode, or the batch-aggregating SparseEngine.
 
 LM decode over a reduced or full config:
 
   PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-3-4b \
       --reduced --requests 8 --slots 4
 
-Sparse workload: serve SpMV requests over a Table-1 suite matrix through the
-``repro.tune`` facade.  The first launch runs the autotuner's measured
-search; the winning plan is persisted in the on-disk plan cache
+Sparse workload: serve SpMV requests over a Table-1 suite matrix through
+``repro.runtime.engine.SparseEngine`` — pending requests are aggregated into
+k-bucketed SpMM batches (Fig 9's amortization applied to serving), each
+bucket dispatching the plan ``repro.tune`` measured for that width.  The
+first launch searches every bucket; plans persist in the on-disk plan cache
 (~/.cache/repro_tune, override with $REPRO_TUNE_CACHE), so a restarted
-server skips straight to the prepared kernel:
+engine reloads the whole k-indexed plan table without re-searching:
 
-  PYTHONPATH=src python -m repro.launch.serve --sparse cant --requests 64
+  PYTHONPATH=src python -m repro.launch.serve --sparse cant --requests 64 \
+      --k-buckets 1,4,16,64 [--shards 4]
 """
 from __future__ import annotations
 
@@ -24,40 +27,52 @@ from repro.configs import ARCH_IDS, get_config, get_reduced
 
 
 def serve_sparse(args) -> None:
-    import jax
     import jax.numpy as jnp
 
     from repro.data.suite import SUITE, generate
-    from repro.tune import SparseOperator
+    from repro.runtime.engine import SparseEngine
 
     names = [s.name for s in SUITE]
     if args.sparse not in names:
         raise SystemExit(
             f"unknown suite matrix {args.sparse!r}; choose from: {', '.join(names)}"
         )
+    ks = tuple(int(k) for k in args.k_buckets.split(","))
     a = generate(args.sparse, scale=args.scale)
     t0 = time.perf_counter()
-    op = SparseOperator.build(a)  # default on-disk plan cache
+    eng = SparseEngine(a, ks=ks, n_shards=args.shards)  # on-disk plan cache
     t_build = time.perf_counter() - t0
     rng = np.random.default_rng(0)
     xs = [
         jnp.asarray(rng.standard_normal(a.shape[1]).astype(np.float32))
         for _ in range(args.requests)
     ]
-    y = op @ xs[0]  # compile outside the timed loop
-    jax.block_until_ready(y)
+    eng.run(xs[: min(len(xs), max(ks))])  # compile outside the timed window
+    eng.stats = type(eng.stats)()  # measure the steady state only
     t0 = time.perf_counter()
-    for x in xs:
-        y = op @ x
-    jax.block_until_ready(y)
+    reqs = [eng.submit(x) for x in xs]  # offered load: all pending at once
+    eng.drain()
     dt = time.perf_counter() - t0
     flops = 2 * a.nnz * len(xs)
+    s = eng.stats.summary()
+    plans = {k: op.plan.candidate.key() for k, op in eng.ops.items()}
+    if args.shards > 1:
+        src = f"row-partitioned stacked dispatch over {args.shards} shards"
+    elif eng.from_cache:
+        src = "k-indexed plan table from cache"
+    else:
+        src = f"searched in {t_build:.1f}s"
+    lat = sorted(r.latency_s for r in reqs)
     print(
         f"served {len(xs)} spmv requests on {args.sparse}@{args.scale:g} "
         f"({a.shape[0]}x{a.shape[1]}, nnz={a.nnz}) in {dt:.3f}s "
-        f"({len(xs) / dt:.1f} req/s, {flops / dt / 1e9:.2f} GF/s); "
-        f"plan={op.plan.candidate.key()} "
-        f"({'plan cache' if op.from_cache else f'searched in {t_build:.1f}s'})"
+        f"({len(xs) / dt:.1f} req/s, {flops / dt / 1e9:.2f} GF/s)\n"
+        f"  dispatches={s['dispatches']} by_bucket={s['by_bucket']} "
+        f"occupancy={s['occupancy']:.2f} "
+        f"latency mean/p50/p99 = {s['latency_mean_ms']:.2f}/"
+        f"{lat[len(lat) // 2] * 1e3:.2f}/{s['latency_p99_ms']:.2f} ms\n"
+        f"  plans={plans}\n"
+        f"  ({src})"
     )
 
 
@@ -82,9 +97,14 @@ def serve_lm(args) -> None:
     dt = time.perf_counter() - t0
     done = sum(r.done for r in reqs)
     toks = sum(len(r.out) for r in reqs)
+    lats = sorted(r.latency_s for r in reqs if r.done)
+    lat_txt = (f", request latency p50 {lats[len(lats) // 2]:.2f}s "
+               f"p99 {lats[int(len(lats) * 0.99)]:.2f}s" if lats else "")
     print(f"served {done}/{len(reqs)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s, {srv.steps} decode steps, "
-          f"batch occupancy {toks / max(srv.steps, 1):.2f}/{args.slots})")
+          f"{srv.prefills} prefills, "
+          f"batch occupancy {srv.occupancy * args.slots:.2f}/{args.slots}"
+          f"{lat_txt})")
 
 
 def main():
@@ -95,6 +115,11 @@ def main():
                          "instead of an LM")
     ap.add_argument("--scale", type=float, default=1 / 64,
                     help="suite matrix scale for --sparse")
+    ap.add_argument("--k-buckets", default="1,4,16,64",
+                    help="tuned batch widths for the sparse engine")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="row-partition the matrix and dispatch shards "
+                         "under one batched vmap (core.distributed)")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)

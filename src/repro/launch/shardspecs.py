@@ -100,12 +100,14 @@ def batch_shardings(mesh, cfg: ModelConfig, batch_shapes):
 
 
 def _kv_cache_spec(ba):
-    # leading layer dim; k/v: (L, b, slots, kvh, hd) — slots over 'model'
+    # leading layer dim; k/v: (L, b, slots, kvh, hd) — slots over 'model'.
+    # positions/pos are tracked per batch element ((L, b, slots) / (L, b)):
+    # batch follows k/v's batch axes, slots follow the 'model' slot sharding.
     return {
         "k": P(None, ba, "model", None, None),
         "v": P(None, ba, "model", None, None),
-        "positions": P(None, "model"),
-        "pos": P(None),
+        "positions": P(None, ba, "model"),
+        "pos": P(None, ba),
     }
 
 

@@ -144,27 +144,33 @@ def flash_attention(
 def init_kv_cache(
     batch: int, slots: int, kv_heads: int, head_dim: int, dtype=jnp.bfloat16
 ) -> dict[str, Any]:
-    """slots = max_seq for full caches, = window for ring (SWA) caches."""
+    """slots = max_seq for full caches, = window for ring (SWA) caches.
+
+    ``positions``/``pos`` are tracked per batch element so continuous
+    batching can hold sequences at different decode depths in one cache
+    (a freed slot is re-prefilled while its neighbors keep decoding).
+    """
     return {
         "k": jnp.zeros((batch, slots, kv_heads, head_dim), dtype),
         "v": jnp.zeros((batch, slots, kv_heads, head_dim), dtype),
-        "positions": jnp.full((slots,), -1, jnp.int32),
-        "pos": jnp.zeros((), jnp.int32),  # next absolute position
+        "positions": jnp.full((batch, slots), -1, jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),  # next absolute position
     }
 
 
 def update_kv_cache(cache, k_new, v_new):
-    """Append one token (k/v_new: (b, 1, kvh, hd)); ring semantics via mod."""
-    slots = cache["k"].shape[1]
-    pos = cache["pos"]
-    slot = pos % slots
-    k = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1
-    )
-    v = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1
-    )
-    positions = cache["positions"].at[slot].set(pos)
+    """Append one token (k/v_new: (b, 1, kvh, hd)); ring semantics via mod.
+
+    Each batch element appends at its own ring position, so sequences in
+    the same cache may sit at different absolute positions.
+    """
+    b, slots = cache["k"].shape[:2]
+    pos = cache["pos"]  # (b,)
+    slot = pos % slots  # (b,)
+    rows = jnp.arange(b)
+    k = cache["k"].at[rows, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[rows, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+    positions = cache["positions"].at[rows, slot].set(pos)
     return {"k": k, "v": v, "positions": positions, "pos": pos + 1}
 
 
@@ -179,14 +185,14 @@ def decode_attention(
     kvh = cache["k"].shape[2]
     g = h // kvh
     scale = hd ** -0.5
-    pos = cache["pos"] - 1  # the query's absolute position (already appended)
+    pos = cache["pos"] - 1  # (b,) the query's position (already appended)
     qv = q.reshape(b, kvh, g, hd).astype(jnp.float32)
     kc = cache["k"].astype(jnp.float32)
     s = jnp.einsum("bkgd,bskd->bkgs", qv, kc) * scale
-    valid = (cache["positions"] >= 0) & (cache["positions"] <= pos)
+    valid = (cache["positions"] >= 0) & (cache["positions"] <= pos[:, None])
     if window is not None:
-        valid &= pos - cache["positions"] < window
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        valid &= pos[:, None] - cache["positions"] < window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", p, cache["v"].astype(jnp.float32))
     return out.reshape(b, 1, h, hd).astype(q.dtype)

@@ -28,7 +28,8 @@ import numpy as np
 from .common import Px, dense_init, shard
 
 __all__ = ["swiglu_init", "swiglu_apply", "gelu_ffn_init", "gelu_ffn_apply",
-           "SparseFFNConfig", "sparse_ffn_init", "sparse_ffn_apply"]
+           "SparseFFNConfig", "sparse_ffn_init", "sparse_ffn_apply",
+           "sparse_ffn_weight_csr", "tune_sparse_ffn"]
 
 
 # ---------------------------------------------------------------------------
@@ -83,6 +84,11 @@ class SparseFFNConfig:
     density: float = 0.25  # bcsr: fraction of (bm, bk) blocks kept
     block: tuple[int, int] = (128, 128)  # bcsr block shape
     seed: int = 0
+    # bcsr execution tier: "pallas" (hand-tiled kernel), "ref" (XLA
+    # dense-block einsum), or "auto" — resolved to one of the two by
+    # tune_sparse_ffn, which routes the weight matrices through
+    # repro.tune.SparseOperator's measured search at serve/launch time.
+    impl: str = "pallas"
 
 
 def sparse_ffn_init(
@@ -153,23 +159,87 @@ def sparse_ffn_apply(p, x, cfg: SparseFFNConfig, d_ff: int):
             out = out + jnp.roll(y_parts[i], shift=o, axis=2)
         return out.reshape(b, s, d_model)
     if cfg.kind == "bcsr":
-        from repro.kernels.bcsr_spmm import bcsr_spmm_pallas
-
         bm, bk = cfg.block
+
+        def mm(which, x_blocked, n_block_rows):
+            """One sparse weight matmul on the tier cfg.impl selected
+            ("pallas" kernel, or the XLA dense-block einsum — the tier
+            tune_sparse_ffn's measured search picks on CPU)."""
+            if cfg.impl == "pallas":
+                from repro.kernels.bcsr_spmm import bcsr_spmm_pallas
+
+                return bcsr_spmm_pallas(
+                    p[f"{which}_rows"], p[f"{which}_cols"], p[f"{which}_blocks"],
+                    x_blocked, n_block_rows=n_block_rows,
+                    interpret=jax.default_backend() == "cpu",
+                )
+            from repro.core.spmv import spmm_bcsr_dense
+
+            return spmm_bcsr_dense(
+                {"blocks": p[f"{which}_blocks"], "block_cols": p[f"{which}_cols"],
+                 "block_rows": p[f"{which}_rows"]},
+                x_blocked, n_block_rows=n_block_rows,
+            )
+
         xt = x.reshape(b * s, d_model).T  # (d_model, T) — spmm wants A @ X
-        interpret = jax.default_backend() == "cpu"
-        h = bcsr_spmm_pallas(
-            p["w1_rows"], p["w1_cols"], p["w1_blocks"],
-            xt.reshape(d_model // bk, bk, b * s),
-            n_block_rows=d_ff // bm,
-            interpret=interpret,
-        )  # (d_ff//bm, bm, T)
-        h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype)
-        y = bcsr_spmm_pallas(
-            p["w2_rows"], p["w2_cols"], p["w2_blocks"],
-            h.reshape(d_ff // bm, bm, b * s),
-            n_block_rows=d_model // bk,
-            interpret=interpret,
-        )  # (d_model//bk, bk, T)
+        h = mm("w1", xt.reshape(d_model // bk, bk, b * s), d_ff // bm)
+        h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype)  # (gm, bm, T)
+        y = mm("w2", h.reshape(d_ff // bm, bm, b * s), d_model // bk)
         return y.reshape(d_model, b * s).T.reshape(b, s, d_model)
     raise ValueError(cfg.kind)
+
+
+# ---------------------------------------------------------------------------
+# Autotuned routing: the FFN weight matrices through repro.tune
+# ---------------------------------------------------------------------------
+def sparse_ffn_weight_csr(p: dict, which: str, cfg: SparseFFNConfig,
+                          d_model: int, d_ff: int):
+    """One bcsr FFN weight (``which`` in {"w1", "w2"}) as a host CSRMatrix.
+
+    Accepts per-layer or layer-stacked params (the leading ``layers`` axis
+    from the scan stack); stacked weights use layer 0 — every layer shares
+    the same seeded block pattern, which is all the structure-keyed tuner
+    looks at.
+    """
+    from repro.core.formats import csr_from_coo
+
+    bm, bk = cfg.block
+    blocks = np.asarray(p[f"{which}_blocks"], np.float32)
+    brows = np.asarray(p[f"{which}_rows"], np.int64)
+    bcols = np.asarray(p[f"{which}_cols"], np.int64)
+    if blocks.ndim == 4:  # (layers, n_blocks, bm, bk) scan stack
+        blocks, brows, bcols = blocks[0], brows[0], bcols[0]
+    if which == "w2":
+        bm, bk = bk, bm  # w2 blocks are (bk, bm): maps d_ff -> d_model
+        shape = (d_model, d_ff)
+    else:
+        shape = (d_ff, d_model)
+    n_blocks = blocks.shape[0]
+    ii, jj = np.meshgrid(np.arange(bm), np.arange(bk), indexing="ij")
+    rows = (brows[:, None, None] * bm + ii[None]).reshape(-1)
+    cols = (bcols[:, None, None] * bk + jj[None]).reshape(-1)
+    return csr_from_coo(shape, rows, cols, blocks.reshape(-1),
+                        sum_duplicates=False)
+
+
+def tune_sparse_ffn(cfg: SparseFFNConfig, p: dict, d_model: int, d_ff: int,
+                    *, k: int = 16, cache=None, **build_kwargs) -> SparseFFNConfig:
+    """Resolve ``impl="auto"`` by routing the W1 weight through the tuner.
+
+    Builds the weight's CSR form, runs :class:`repro.tune.SparseOperator`'s
+    measured SpMM search at width ``k`` (the expected tokens-per-step), and
+    maps the winning plan back onto the FFN's execution tiers: a bcsr/pallas
+    win keeps the Pallas kernel, anything else (CSR gather, BCSR einsum —
+    the usual CPU outcome, where Pallas runs in interpret mode) selects the
+    XLA "ref" tier.  The plan lands in the shared cache, so a restarted
+    server skips the search.
+    """
+    from repro.tune import SparseOperator
+
+    if cfg.kind != "bcsr" or cfg.impl != "auto":
+        return cfg
+    a = sparse_ffn_weight_csr(p, "w1", cfg, d_model, d_ff)
+    op = SparseOperator.build(a, k=max(int(k), 2), cache=cache, **build_kwargs)
+    plan = op.plan
+    impl = "pallas" if (plan.fmt, plan.impl) == ("bcsr", "pallas") else "ref"
+    return dataclasses.replace(cfg, impl=impl)

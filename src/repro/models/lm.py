@@ -572,11 +572,12 @@ def decode_step(cfg: ModelConfig, params, state, tokens):
     def attn_decode(p, x, cache, lora=None, cross_kv=None):
         """x (b, 1, d) -> (y, cache'). Appends K/V then attends."""
         q, k, v = _project_qkv(cfg, p, x, lora)
-        pos = cache["pos"]
-        posb = jnp.broadcast_to(pos[None, None], (b, 1))
+        pos = cache["pos"]  # (b,) per-slot decode positions
+        posb = pos[:, None]
         if cfg.mrope_sections is not None:
-            q = apply_mrope(q, jnp.broadcast_to(pos, (3, b, 1)), cfg.mrope_sections, cfg.rope_theta)
-            k = apply_mrope(k, jnp.broadcast_to(pos, (3, b, 1)), cfg.mrope_sections, cfg.rope_theta)
+            pos3 = jnp.broadcast_to(pos[None, :, None], (3, b, 1))
+            q = apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
+            k = apply_mrope(k, pos3, cfg.mrope_sections, cfg.rope_theta)
         elif cfg.family != "audio":
             cos, sin = rope(posb, cfg.hd, cfg.rope_theta)
             q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
@@ -642,14 +643,16 @@ def decode_step(cfg: ModelConfig, params, state, tokens):
         state = {"kv": kv, "mamba": mst}
     elif fam == "audio":
         cross = state["cross"]
-        # absolute sinusoidal position of the new token
-        pos0 = state["kv"]["pos"][0]
+        # absolute sinusoidal position of the new token (per batch element)
+        pos0 = state["kv"]["pos"][0]  # (b,) layer-0 positions
         half = cfg.d_model // 2
         freqs = jnp.exp(
             -jnp.log(10000.0) * jnp.arange(half) / max(half - 1, 1)
         )
-        ang = pos0.astype(jnp.float32) * freqs
-        h = h + jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None].astype(h.dtype)
+        ang = pos0.astype(jnp.float32)[:, None] * freqs[None, :]  # (b, half)
+        h = h + jnp.concatenate(
+            [jnp.sin(ang), jnp.cos(ang)], axis=-1
+        )[:, None, :].astype(h.dtype)
 
         def body(x, xs):
             p, cache, ckv = xs
@@ -741,8 +744,9 @@ def _prefill_caches(cfg, params, batch, max_seq):
         kc = kc.at[:, slot_ids].set(k[:, -take:].astype(cfg.dtype))
         vc = vc.at[:, slot_ids].set(v[:, -take:].astype(cfg.dtype))
         positions_slots = jnp.full((slots,), -1, jnp.int32).at[slot_ids].set(pos_ids)
-        cache = {"k": kc, "v": vc, "positions": positions_slots,
-                 "pos": jnp.asarray(s, jnp.int32)}
+        cache = {"k": kc, "v": vc,
+                 "positions": jnp.broadcast_to(positions_slots, (b, slots)),
+                 "pos": jnp.full((b,), s, jnp.int32)}
         return y, cache
 
     fam = cfg.family

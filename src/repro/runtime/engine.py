@@ -1,0 +1,270 @@
+"""SparseEngine: a batch-aggregating, k-aware SpMV serving runtime.
+
+The paper's decisive throughput lever on a memory-bound machine is turning
+SpMV (k=1) into SpMM (k>1): Fig 9 shows matrix traffic amortized over many
+right-hand sides beats any single-kernel tweak.  This module is that finding
+as a serving runtime: the engine owns a request queue, aggregates pending
+SpMV requests into stacked right-hand-side batches (columns of X), and
+dispatches each batch through the ``repro.tune`` plan tuned for that width.
+
+Plans are held per *k-bucket* (default k in {1, 4, 16, 64}); a batch of b
+pending requests is rounded up to the smallest bucket >= b and padded with
+zero columns.  Occupancy therefore decides at runtime whether the k=1 SpMV
+plan (CSR-vector / SELL) or a wide SpMM plan (CSR gather / BCSR) runs — the
+serving analogue of the paper's Fig 9 crossover.  The bucket plan table
+comes from :meth:`repro.tune.SparseOperator.build_multi` and lives in the
+shared JSON plan cache, so a restarted engine reloads every bucket's plan
+without re-searching.
+
+Row-partitioned mode (``n_shards > 1``) routes batches through
+``core.distributed.stacked_spmm`` instead: the matrix is split by
+``core.partition.rows_balanced`` and every shard runs under one vmapped
+dispatch — the same aggregation idea applied across the row dimension.
+
+    eng = SparseEngine(a)            # tunes (or cache-loads) all buckets
+    reqs = [eng.submit(x) for x in xs]
+    eng.drain()                      # dispatches k-bucketed batches
+    reqs[0].y, reqs[0].latency_s     # per-request result + latency
+    eng.stats.summary()              # occupancy / padding / bucket counts
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distributed import assemble_rows, stacked_spmm
+from repro.core.formats import CSRMatrix
+from repro.core.partition import rows_balanced, stack_csr_shards
+from repro.tune import PlanCache, SparseOperator
+
+__all__ = ["SparseEngine", "EngineRequest", "EngineStats", "K_BUCKETS"]
+
+K_BUCKETS = (1, 4, 16, 64)
+
+
+@dataclasses.dataclass
+class EngineRequest:
+    """One queued y = A @ x request; filled in when its batch completes."""
+
+    rid: int
+    x: jax.Array  # (n,)
+    t_submit: float
+    t_done: float | None = None
+    bucket: int | None = None  # k-bucket the request was dispatched in
+    _ys: jax.Array | None = None  # the whole batch result (m, bucket)
+    _col: int = 0  # this request's column of _ys
+
+    @property
+    def done(self) -> bool:
+        return self._ys is not None
+
+    @property
+    def y(self) -> jax.Array | None:
+        """(m,) result; sliced lazily so serving never pays per-column
+        dispatch overhead inside the batch hot path."""
+        if self._ys is None:
+            return None
+        return self._ys[:, self._col] if self._ys.ndim == 2 else self._ys
+
+    @property
+    def latency_s(self) -> float:
+        assert self.t_done is not None, "request not served yet"
+        return self.t_done - self.t_submit
+
+
+@dataclasses.dataclass
+class EngineStats:
+    n_requests: int = 0
+    n_dispatches: int = 0
+    dispatched: dict = dataclasses.field(default_factory=dict)  # bucket -> #
+    occupied_cols: int = 0  # real request columns dispatched
+    padded_cols: int = 0  # zero columns added by bucket round-up
+    latencies_s: list = dataclasses.field(default_factory=list)
+
+    def record(self, bucket: int, n_real: int, lats: Iterable[float]) -> None:
+        self.n_dispatches += 1
+        self.dispatched[bucket] = self.dispatched.get(bucket, 0) + 1
+        self.occupied_cols += n_real
+        self.padded_cols += bucket - n_real
+        self.latencies_s.extend(lats)
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of dispatched RHS columns that were real requests."""
+        total = self.occupied_cols + self.padded_cols
+        return self.occupied_cols / total if total else 0.0
+
+    def summary(self) -> dict[str, Any]:
+        lats = np.asarray(self.latencies_s) if self.latencies_s else np.zeros(1)
+        return {
+            "requests": self.n_requests,
+            "dispatches": self.n_dispatches,
+            "by_bucket": dict(sorted(self.dispatched.items())),
+            "occupancy": round(self.occupancy, 4),
+            "latency_mean_ms": round(float(lats.mean()) * 1e3, 3),
+            "latency_p99_ms": round(float(np.quantile(lats, 0.99)) * 1e3, 3),
+        }
+
+
+class SparseEngine:
+    """Batch-aggregating serving runtime over a k-indexed plan table.
+
+    ``ks`` are the tuned batch widths (ascending); ``cache`` is the shared
+    plan cache (defaults to the on-disk one, so engine restarts skip the
+    measured search).  ``n_shards > 1`` switches every dispatch to the
+    row-partitioned ``stacked_spmm`` path (CSR shards under one vmap); the
+    tuned plan table is skipped entirely in that mode.  Remaining keyword
+    arguments (warmup/timed/force_search/include_reorder/...) pass through
+    to :meth:`SparseOperator.build`.
+    """
+
+    def __init__(
+        self,
+        a: CSRMatrix,
+        *,
+        ks: Sequence[int] = K_BUCKETS,
+        cache: PlanCache | None = None,
+        n_shards: int = 1,
+        **build_kwargs: Any,
+    ):
+        if not ks:
+            raise ValueError("need at least one k-bucket")
+        self.a = a
+        self.shape = a.shape
+        self.ks = tuple(sorted({int(k) for k in ks}))
+        self.n_shards = int(n_shards)
+        if self.n_shards > 1:
+            # Row-partitioned mode dispatches through stacked_spmm for every
+            # bucket; don't pay the per-bucket measured search for plans that
+            # would never run.
+            self.ops = {}
+            part = rows_balanced(a, self.n_shards)
+            self._stacked = {
+                key: jnp.asarray(v)
+                for key, v in stack_csr_shards(part.shards).items()
+            }
+            self._shard_rows = np.diff(part.bounds)
+        else:
+            self.ops = SparseOperator.build_multi(
+                a, ks=self.ks, cache=cache, **build_kwargs
+            )
+        self._queue: deque[EngineRequest] = deque()
+        self._rid = 0
+        self._batch_fns: dict[int, Any] = {}  # bucket -> jitted stack+spmm
+        self._zero = jnp.zeros((self.shape[1],), jnp.float32)  # pad column
+        self.stats = EngineStats()
+
+    # -- queueing -----------------------------------------------------------
+    @property
+    def from_cache(self) -> bool:
+        """True when every bucket's plan came from the cache (no search)."""
+        return all(op.from_cache for op in self.ops.values())
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def submit(self, x: jax.Array) -> EngineRequest:
+        """Enqueue y = A @ x; returns a ticket filled in by a later step()."""
+        if not isinstance(x, jax.Array):  # asarray on a device array costs
+            x = jnp.asarray(x)            # ~20us — real vs serving rates
+        if x.shape != (self.shape[1],):
+            raise ValueError(f"expected x of shape ({self.shape[1]},), got {x.shape}")
+        req = EngineRequest(rid=self._rid, x=x, t_submit=time.perf_counter())
+        self._rid += 1
+        self._queue.append(req)
+        self.stats.n_requests += 1
+        return req
+
+    # -- dispatch -----------------------------------------------------------
+    def _bucket_for(self, n_pending: int) -> tuple[int, int]:
+        take = min(n_pending, self.ks[-1])
+        bucket = next(k for k in self.ks if k >= take)
+        return bucket, take
+
+    def step(self) -> int:
+        """Dispatch one aggregated batch; returns #requests served (0 = idle).
+
+        Takes up to max(ks) pending requests, rounds the count up to the
+        smallest k-bucket and pads the RHS with zero columns, then runs the
+        bucket's tuned plan (or the row-partitioned stacked dispatch).
+        """
+        if not self._queue:
+            return 0
+        bucket, take = self._bucket_for(len(self._queue))
+        reqs = [self._queue.popleft() for _ in range(take)]
+
+        if bucket == 1:
+            ys = self._dispatch_one(reqs[0].x)  # (m,)
+        else:
+            cols = [r.x for r in reqs] + [self._zero] * (bucket - take)
+            ys = self._batched_fn(bucket)(cols)
+        ys = jax.block_until_ready(ys)
+
+        t_done = time.perf_counter()
+        for i, req in enumerate(reqs):
+            req._ys = ys
+            req._col = i
+            req.t_done = t_done
+            req.bucket = bucket
+        self.stats.record(bucket, take, (r.latency_s for r in reqs))
+        return take
+
+    def _dispatch_one(self, x: jax.Array) -> jax.Array:
+        if self.n_shards > 1:
+            ys = stacked_spmm(self._stacked, x[:, None])
+            return assemble_rows(ys, self._shard_rows)[:, 0]
+        return self.ops[1] @ x
+
+    def _batched_fn(self, bucket: int):
+        """One jitted function per bucket fusing RHS stacking + dispatch.
+
+        The column stack, zero-padding and the plan's kernel compile into a
+        single XLA program, so an aggregated dispatch costs one launch —
+        eager stack/pad overhead would otherwise eat the amortization on
+        small matrices.
+        """
+        fn = self._batch_fns.get(bucket)
+        if fn is None:
+            if self.n_shards > 1:
+                stacked, rows = self._stacked, self._shard_rows
+
+                def raw(cols):
+                    ys = stacked_spmm(stacked, jnp.stack(cols, axis=1))
+                    return assemble_rows(ys, rows)
+            else:
+                run = self.ops[bucket]._run  # the plan's bound kernel
+
+                def raw(cols):
+                    return run(jnp.stack(cols, axis=1))
+
+            fn = self._batch_fns[bucket] = jax.jit(raw)
+        return fn
+
+    def drain(self) -> int:
+        """Dispatch until the queue is empty; returns #requests served."""
+        served = 0
+        while True:
+            n = self.step()
+            if n == 0:
+                return served
+            served += n
+
+    def run(self, xs: Iterable[jax.Array]) -> list[jax.Array]:
+        """Convenience: submit all, drain, return results in submit order."""
+        reqs = [self.submit(x) for x in xs]
+        self.drain()
+        return [r.y for r in reqs]
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        plans = {k: op.plan.candidate.key() for k, op in self.ops.items()}
+        return (
+            f"SparseEngine({self.shape[0]}x{self.shape[1]}, nnz={self.a.nnz}, "
+            f"buckets={plans}, shards={self.n_shards})"
+        )

@@ -2,17 +2,21 @@
 
 The serving shape cells (decode_32k, long_500k) lower ``decode_step``; this
 module is the runnable loop around it: a request queue, B decode slots, and
-per-slot free/assign/evict bookkeeping.  New requests are prefilling into a
-freed slot's cache region while other slots keep decoding (single-process
-simulation of the usual two-queue scheduler).
+per-slot free/assign/evict bookkeeping.  A new request is prefilled with one
+``prefill`` forward pass (batch 1) and its KV cache scattered into the freed
+slot while other slots keep decoding — the KV cache tracks positions per
+slot, so sequences at different decode depths share one jitted step.
 
 SpMV framing (the paper's): decode is the k=1 regime — memory-bound, the
 exact analogue of Fig 4's SpMV; batching B requests is the SpMM move (Fig 9)
-applied to serving, which is why throughput/chip rises with occupancy.
+applied to serving, which is why throughput/chip rises with occupancy.  The
+same framing drives :class:`repro.runtime.engine.SparseEngine`, which applies
+it to raw SpMV requests.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import jax
@@ -31,17 +35,63 @@ class Request:
     max_new: int
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    t_submit: float | None = None
+    t_start: float | None = None  # slot assignment (prefill) time
+    t_done: float | None = None
+
+    @property
+    def latency_s(self) -> float:
+        assert self.t_done is not None and self.t_submit is not None
+        return self.t_done - self.t_submit
+
+
+def _merge_slot(state, state1, i: int):
+    """Scatter a batch-1 decode state into batch element ``i`` of ``state``.
+
+    Works leaf-by-leaf: the batch axis is located as the first axis where the
+    shared leaf and the batch-1 leaf disagree (the latter being 1), which
+    covers every family's state layout (kv: (L, B, ...), mamba:
+    (n_super, period, B, ...), rwkv/cross alike) without per-family code.
+    """
+
+    def merge(s, s1):
+        if s.shape == s1.shape:  # B == 1 server: the whole state is the slot
+            return s1
+        for ax in range(s.ndim):
+            if s.shape[ax] != s1.shape[ax] and s1.shape[ax] == 1:
+                idx = [slice(None)] * s.ndim
+                idx[ax] = i
+                return s.at[tuple(idx)].set(jnp.squeeze(s1, axis=ax))
+        raise ValueError(f"cannot locate batch axis: {s.shape} vs {s1.shape}")
+
+    return jax.tree.map(merge, state, state1)
 
 
 class BatchedServer:
     """Fixed-B slot server over jitted decode_step.
 
     Greedy sampling (argmax) for determinism; temperature hooks left in.
-    For simplicity each slot decodes independently but all slots share the
-    step; empty slots decode a pad token into a scratch cache row.
+    All slots share the jitted step; empty slots decode a pad token into
+    their own (soon overwritten) cache rows.
     """
 
     def __init__(self, cfg: ModelConfig, params, batch_slots: int, max_seq: int):
+        if (cfg.sparse_ffn is not None and cfg.sparse_ffn.kind == "bcsr"
+                and cfg.sparse_ffn.impl == "auto"):
+            # Route the bcsr FFN weights through the repro.tune measured
+            # search: the served model decodes with the kernel tier that
+            # actually wins on this backend at this batch width.
+            from repro.models.ffn import tune_sparse_ffn
+
+            ffn_p = (params["blocks"] if "blocks" in params
+                     else params["shared"])["ffn"]
+            cfg = dataclasses.replace(
+                cfg,
+                sparse_ffn=tune_sparse_ffn(
+                    cfg.sparse_ffn, ffn_p, cfg.d_model, cfg.d_ff,
+                    k=batch_slots,
+                ),
+            )
         self.cfg = cfg
         self.params = params
         self.B = batch_slots
@@ -52,27 +102,37 @@ class BatchedServer:
         self._decode = jax.jit(
             lambda p, s, t: decode_step(cfg, p, s, t), donate_argnums=(1,)
         )
+        self._prefill = jax.jit(lambda p, b: prefill(cfg, p, b, max_seq))
         self.steps = 0
+        self.prefills = 0
+        self.slot_tokens = 0  # decoded tokens, for occupancy reporting
+        self.completed: list[Request] = []
 
     def submit(self, req: Request):
+        req.t_submit = time.perf_counter()
         self.queue.append(req)
 
     def _assign(self):
-        """Prefill queued requests into free slots (one at a time here)."""
+        """Prefill queued requests into free slots.
+
+        One ``prefill`` forward pass per request (batch 1, full prompt at
+        once) whose K/V cache is scattered into the freed slot — replacing
+        the old token-at-a-time replay through full-batch ``decode_step``,
+        which burned a B-wide step per prompt token and polluted the other
+        slots' position counters.
+        """
         for i in range(self.B):
             if self.slot_req[i] is None and self.queue:
                 req = self.queue.pop(0)
                 self.slot_req[i] = req
-                # Prefill the whole batch state is overkill for one slot; in
-                # this simulation we replay the prompt through decode_step on
-                # the shared state (prompt lengths are short in the example).
-                for t in req.prompt:
-                    toks = np.zeros((self.B, 1), np.int32)
-                    toks[i, 0] = t
-                    self.state, logits = self._decode(
-                        self.params, self.state, jnp.asarray(toks)
-                    )
-                req._last_logits = np.asarray(logits[i])
+                state1, logits = self._prefill(
+                    self.params,
+                    {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)},
+                )
+                self.state = _merge_slot(self.state, state1, i)
+                req._last_logits = np.asarray(logits[0])
+                req.t_start = time.perf_counter()
+                self.prefills += 1
 
     def step(self) -> int:
         """One decode step for all active slots; returns #active."""
@@ -87,18 +147,27 @@ class BatchedServer:
             toks[i, 0] = last
         self.state, logits = self._decode(self.params, self.state, jnp.asarray(toks))
         logits_np = np.asarray(logits)
+        t_now = time.perf_counter()
         for i in active:
             req = self.slot_req[i]
             nxt = int(np.argmax(logits_np[i, 0] if logits_np.ndim == 3 else logits_np[i]))
             req.out.append(nxt)
             if len(req.out) >= req.max_new:
                 req.done = True
+                req.t_done = t_now
+                self.completed.append(req)
                 self.slot_req[i] = None
         self.steps += 1
+        self.slot_tokens += len(active)
         return len(active)
 
-    def run_until_drained(self, max_steps: int = 10_000):
-        done: list[Request] = []
-        while (self.queue or any(self.slot_req)) and self.steps < max_steps:
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of decode slots doing real work per step."""
+        return self.slot_tokens / max(self.steps * self.B, 1)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        while (self.queue or any(r is not None for r in self.slot_req)) \
+                and self.steps < max_steps:
             self.step()
-        return done
+        return self.completed

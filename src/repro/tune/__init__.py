@@ -10,6 +10,7 @@ from .candidates import (
     BCSR_BLOCKS,
     Candidate,
     DEFAULT_PRUNE_FACTOR,
+    REORDER_METHODS,
     SELL_SIGMAS,
     bcsr_block_count,
     enumerate_candidates,
@@ -17,6 +18,7 @@ from .candidates import (
     make,
     prune,
     sell_padded_slots,
+    split_reorder,
 )
 from .features import MatrixFeatures, extract
 from .operator import SparseOperator, prepare, runner
@@ -31,6 +33,7 @@ __all__ = [
     "PLAN_VERSION",
     "Plan",
     "PlanCache",
+    "REORDER_METHODS",
     "SELL_SIGMAS",
     "SparseOperator",
     "TIMED",
@@ -46,5 +49,6 @@ __all__ = [
     "prune",
     "runner",
     "sell_padded_slots",
+    "split_reorder",
     "time_fn",
 ]

@@ -29,6 +29,7 @@ from .features import MatrixFeatures
 __all__ = [
     "Candidate",
     "make",
+    "split_reorder",
     "enumerate_candidates",
     "estimate_cost",
     "prune",
@@ -37,11 +38,13 @@ __all__ = [
     "DEFAULT_PRUNE_FACTOR",
     "SELL_SIGMAS",
     "BCSR_BLOCKS",
+    "REORDER_METHODS",
 ]
 
 SELL_SIGMAS = (1, 64, 256)
 BCSR_BLOCKS = ((8, 8), (8, 16), (8, 128))  # Table 2's TPU-tile adaptation
 DEFAULT_PRUNE_FACTOR = 3.0
+REORDER_METHODS = ("rcm",)  # paper §4.4; opt-in via enumerate(reorders=...)
 
 # Impl throughput penalties (multiplies the byte estimate).  "scalar" is the
 # paper's unvectorized -O1 tier; "pallas" on the CPU backend runs the kernels
@@ -86,6 +89,21 @@ def make(fmt: str, impl: str, **params: Any) -> Candidate:
     return Candidate(fmt, impl, norm)
 
 
+def split_reorder(cand: Candidate) -> tuple[str | None, Candidate]:
+    """(reorder method, candidate without the reorder param).
+
+    Reordering (paper §4.4: RCM densification) is orthogonal to the
+    format/impl choice, so it rides along as a ``reorder=<method>`` param;
+    prepare/runner strip it here and wrap the base candidate in the
+    permutation.
+    """
+    p = cand.param_dict
+    method = p.pop("reorder", None)
+    if method is None:
+        return None, cand
+    return str(method), make(cand.fmt, cand.impl, **p)
+
+
 def enumerate_candidates(
     feats: MatrixFeatures,
     kind: str = "spmv",
@@ -95,6 +113,7 @@ def enumerate_candidates(
     chunk_tiles: Iterable[int] = (8, 16),
     include_scalar: bool = True,
     include_pallas: bool = True,
+    reorders: Iterable[str] = (),
 ) -> list[Candidate]:
     """The format x impl x params cross-product for one matrix.
 
@@ -102,6 +121,12 @@ def enumerate_candidates(
     (kind="spmm") contrasts CSR gather/segment-sum with the Table 2 BCSR
     shapes.  Column-slabbed SELL variants are enumerated only when the x
     footprint exceeds the VMEM budget (features.x_fits_vmem).
+
+    ``reorders`` (e.g. ``("rcm",)``) doubles the space with row/column
+    permuted variants of every non-scalar candidate — the paper's §4.4
+    densification folded into the search.  Square matrices only (RCM is
+    defined on the symmetrized pattern); the scalar tier is skipped since
+    reordering cannot rescue an unvectorized inner loop.
     """
     cands: list[Candidate] = [make("csr", "vector")]
     if kind == "spmv":
@@ -114,6 +139,11 @@ def enumerate_candidates(
                     cands.append(
                         make("sell", "pallas", C=8, sigma=sigma, chunk_tile=ct)
                     )
+    else:
+        # SpMM grew a SELL tier (spmm_sell stacks the RHS through the
+        # chunk-local gathers); the pallas SELL kernel remains k=1-only.
+        for sigma in sigmas:
+            cands.append(make("sell", "ref", C=8, sigma=sigma))
         if not feats.x_fits_vmem:
             from repro.kernels.ops import VMEM_BUDGET_BYTES
 
@@ -137,6 +167,12 @@ def enumerate_candidates(
         cands.append(make("bcsr", "ref", block=tuple(block)))
         if include_pallas:
             cands.append(make("bcsr", "pallas", block=tuple(block)))
+    if reorders and feats.m == feats.n:
+        base = [c for c in cands if c.impl != "scalar"]
+        for method in reorders:
+            cands.extend(
+                make(c.fmt, c.impl, reorder=method, **c.param_dict) for c in base
+            )
     return cands
 
 
@@ -199,6 +235,20 @@ def estimate_cost(
 
         on_cpu = _on_cpu()
     m, n = a.shape
+    method, base = split_reorder(cand)
+    if method is not None:
+        # Estimated on the *original* structure (permuting just to estimate
+        # would cost more than the estimate saves); RCM typically reduces
+        # SELL padding, so this is conservative.  The extra term is the
+        # x-gather / y-scatter permutation traffic at the boundary.
+        perm_bytes = (m + n) * (k * val_bytes + idx_bytes)
+        return (
+            estimate_cost(
+                a, base, feats, k=k, val_bytes=val_bytes,
+                idx_bytes=idx_bytes, on_cpu=on_cpu,
+            )
+            + perm_bytes
+        )
     p = cand.param_dict
     if cand.fmt == "csr":
         bytes_ = (

@@ -27,13 +27,14 @@ from repro.core.formats import CSRMatrix, bcsr_from_csr, sell_from_csr
 from repro.core.spmv import (
     spmm_bcsr_dense,
     spmm_csr,
+    spmm_sell,
     spmv_csr,
     spmv_csr_scalar,
     spmv_sell,
 )
 
 from .candidates import Candidate, enumerate_candidates, estimate_cost, prune
-from .candidates import DEFAULT_PRUNE_FACTOR
+from .candidates import DEFAULT_PRUNE_FACTOR, REORDER_METHODS, split_reorder
 from .features import MatrixFeatures, extract
 from .plan import Plan, PlanCache, default_cache, fingerprint
 from .timing import time_fn
@@ -47,6 +48,14 @@ __all__ = ["SparseOperator", "prepare", "runner"]
 def prepare(a: CSRMatrix, cand: Candidate) -> dict[str, Any]:
     """Host-side format construction for one candidate."""
     from repro.kernels import ops as kops
+
+    method, base = split_reorder(cand)
+    if method is not None:
+        from repro.core import reorder as ro
+
+        perm = {"rcm": ro.rcm, "degree": ro.degree_order}[method](a)
+        ar = a.permuted(perm)
+        return {"perm": perm, "matrix": ar, "inner": prepare(ar, base)}
 
     p = cand.param_dict
     if cand.fmt == "csr":
@@ -79,6 +88,19 @@ def runner(
     from repro.kernels import ops as kops
 
     m, n = a.shape
+    method, base = split_reorder(cand)
+    if method is not None:
+        # y = A x == P^T (PAP^T) (P x): gather x by the permutation, run the
+        # base candidate on the reordered matrix, scatter y back (square
+        # matrices only — enumeration enforces this).
+        inner = runner(prep["matrix"], base, prep["inner"], k=k)
+        perm = jnp.asarray(prep["perm"], jnp.int32)
+
+        def fn(x):
+            yp = inner(x[perm])
+            return jnp.zeros(yp.shape, yp.dtype).at[perm].set(yp)
+
+        return jax.jit(fn)
     if cand.fmt == "csr":
         dev = prep["dev"]
         if k == 1:
@@ -90,8 +112,12 @@ def runner(
 
     if cand.fmt == "sell":
         if cand.impl == "pallas":
+            if k > 1:
+                raise ValueError("sell/pallas has no SpMM tier (k > 1)")
             return lambda x: kops.sell_spmv(prep, x)
         dev = {key: prep[key] for key in ("cols", "vals", "row_perm")}
+        if k > 1:
+            return lambda x: spmm_sell(dev, x, n_rows=m)
         return lambda x: spmv_sell(dev, x, n_rows=m)
 
     if cand.fmt == "sell_blocked":
@@ -172,26 +198,35 @@ class SparseOperator:
         warmup: int = 1,
         timed: int = 3,
         force_search: bool = False,
+        include_reorder: bool = False,
         seed: int = 0,
     ) -> "SparseOperator":
         """Autotune (or fetch the cached plan for) this matrix.
 
         k=None tunes SpMV; k=<width> tunes SpMM with a (n, k) operand.
         ``candidates`` overrides enumeration (pruning still applies);
-        ``force_search`` ignores a cached plan and re-times.
+        ``force_search`` ignores a cached plan and re-times;
+        ``include_reorder`` adds RCM-permuted variants to the search space
+        (paper §4.4).  Cached plans are point measurements: a plan recorded
+        on another backend or at another (m, n, nnz) is invalidated and the
+        search re-runs.
         """
         kind = "spmv" if k is None else "spmm"
         kk = 1 if k is None else int(k)
         fp = fingerprint(a)
+        backend = jax.default_backend()
+        scale = [int(a.shape[0]), int(a.shape[1]), int(a.nnz)]
         cache = default_cache() if cache is None else cache
         if not force_search:
-            plan = cache.get(fp, kind, kk)
+            plan = cache.get(fp, kind, kk, backend=backend, scale=scale)
             if plan is not None:
                 return cls(a, plan, prepare(a, plan.candidate), from_cache=True)
 
         feats = extract(a, k=kk)
         if candidates is None:
-            cands = enumerate_candidates(feats, kind)
+            cands = enumerate_candidates(
+                feats, kind, reorders=REORDER_METHODS if include_reorder else ()
+            )
         else:
             cands = list(candidates)
         costs = {c: estimate_cost(a, c, feats, k=kk) for c in cands}
@@ -223,6 +258,8 @@ class SparseOperator:
             n_candidates=len(cands),
             n_measured=len(survivors),
             k=kk,
+            backend=backend,
+            scale=scale,
         )
         cache.put(plan)
         return cls(
@@ -258,8 +295,38 @@ class SparseOperator:
             n_candidates=1,
             n_measured=0,
             k=kk,
+            backend=jax.default_backend(),
+            scale=[int(a.shape[0]), int(a.shape[1]), int(a.nnz)],
         )
         return cls(a, plan, prepare(a, cand), from_cache=False)
+
+    @classmethod
+    def build_multi(
+        cls,
+        a: CSRMatrix,
+        *,
+        ks: Iterable[int] = (1, 4, 16, 64),
+        cache: PlanCache | None = None,
+        **build_kwargs: Any,
+    ) -> dict[int, "SparseOperator"]:
+        """Tune one plan per k-bucket; returns ``{k: SparseOperator}``.
+
+        The serving engine's plan table: k=1 tunes the SpMV kind, k>1 tunes
+        SpMM with a (n, k) operand — so at runtime, batch occupancy decides
+        whether the CSR-vector SpMV plan or a wide SpMM plan runs (the
+        serving analogue of the paper's Fig 9 crossover).  All buckets share
+        one plan cache: each (fingerprint, kind, k) is a separate entry, so
+        a restarted engine reloads the whole table without re-searching.
+        """
+        cache = default_cache() if cache is None else cache
+        table: dict[int, SparseOperator] = {}
+        for k in sorted({int(k) for k in ks}):
+            if k < 1:
+                raise ValueError(f"k-bucket must be >= 1, got {k}")
+            table[k] = cls.build(
+                a, k=None if k == 1 else k, cache=cache, **build_kwargs
+            )
+        return table
 
     # -- application --------------------------------------------------------
     def __matmul__(self, x: jax.Array) -> jax.Array:

@@ -10,6 +10,13 @@ the indptr/indices byte streams.  Values are deliberately excluded: the
 paper's phenomena (UCLD, fill ratio, row-length dispersion) depend only on
 the pattern, so two matrices with the same pattern share the optimal plan
 and a value update (e.g. a new timestep of the same mesh) hits the cache.
+
+Plans additionally record *where* they were measured: the jax backend
+("cpu"/"tpu"/...) and the problem scale (m, n, nnz).  A plan is a point
+measurement — the candidate that wins on one backend or at one size loses
+at another (interpret-mode Pallas on CPU vs MXU tiles on TPU is the extreme
+case) — so ``PlanCache.get`` treats a backend or scale mismatch as a cache
+miss and the caller re-searches.
 """
 from __future__ import annotations
 
@@ -19,7 +26,7 @@ import json
 import os
 import tempfile
 from pathlib import Path
-from typing import Any
+from typing import Any, Iterable
 
 import numpy as np
 
@@ -29,7 +36,7 @@ from .candidates import Candidate, make
 
 __all__ = ["PLAN_VERSION", "Plan", "PlanCache", "fingerprint", "default_cache"]
 
-PLAN_VERSION = 1
+PLAN_VERSION = 2  # v2: backend + scale recorded, mismatches invalidate
 
 _ENV_CACHE = "REPRO_TUNE_CACHE"
 _DEFAULT_CACHE = "~/.cache/repro_tune/plans.json"
@@ -56,7 +63,22 @@ class Plan:
     n_candidates: int  # enumerated
     n_measured: int  # survived pruning and were timed
     k: int = 1  # dense-operand width (1 for spmv)
+    backend: str = ""  # jax backend the timings were taken on ("" = unknown)
+    scale: list = dataclasses.field(default_factory=list)  # [m, n, nnz]
     version: int = PLAN_VERSION
+
+    def matches(self, backend: str | None, scale: Iterable[int] | None) -> bool:
+        """True when this plan's measurement context covers the request.
+
+        An empty recorded backend/scale (legacy or hand-written plans) never
+        matches a concrete request: point measurements must not be trusted
+        outside the context they were taken in.
+        """
+        if backend is not None and self.backend != backend:
+            return False
+        if scale is not None and list(self.scale) != [int(s) for s in scale]:
+            return False
+        return True
 
     @property
     def candidate(self) -> Candidate:
@@ -93,16 +115,34 @@ class PlanCache:
     def __len__(self) -> int:
         return len(self._plans)
 
-    def get(self, fp: str, kind: str, k: int = 1) -> Plan | None:
+    def get(
+        self,
+        fp: str,
+        kind: str,
+        k: int = 1,
+        *,
+        backend: str | None = None,
+        scale: Iterable[int] | None = None,
+    ) -> Plan | None:
+        """Fetch a plan; backend/scale mismatches invalidate (return None).
+
+        Passing ``backend``/``scale`` asserts the caller's measurement
+        context; a cached plan taken on a different backend or at a
+        different (m, n, nnz) is a stale point-measurement and is treated
+        as a miss so the caller re-searches.
+        """
         d = self._plans.get(self._key(fp, kind, k))
         if d is None or d.get("version") != PLAN_VERSION:
             return None
         try:
-            return Plan.from_json(d)
+            plan = Plan.from_json(d)
         except TypeError:
             # Entry shape drifted (hand edit, or a field change without a
             # version bump): treat as a miss, never crash.
             return None
+        if not plan.matches(backend, scale):
+            return None
+        return plan
 
     def put(self, plan: Plan) -> None:
         self._plans[self._key(plan.fingerprint, plan.kind, plan.k)] = plan.to_json()

@@ -126,6 +126,66 @@ def test_operator_matches_oracle_for_every_spmm_candidate():
         np.testing.assert_allclose(got, ref, atol=5e-3, err_msg=cand.key())
 
 
+def test_rcm_candidates_enumerated_and_oracle_correct():
+    """reorders=("rcm",) doubles the non-scalar space with permuted variants
+    (square matrices only), and every reordered candidate matches the dense
+    oracle through the facade's gather/scatter wrapping."""
+    d, a = small_csr(seed=9)  # square
+    feats = extract(a)
+    base = enumerate_candidates(feats)
+    cands = enumerate_candidates(feats, reorders=("rcm",))
+    rcm_cands = [c for c in cands if c.param_dict.get("reorder") == "rcm"]
+    assert len(rcm_cands) == sum(1 for c in base if c.impl != "scalar")
+    assert len(cands) == len(base) + len(rcm_cands)
+    # Off by default, and never enumerated for non-square shapes.
+    assert all("reorder" not in c.param_dict for c in base)
+    feats_rect = extract(csr_from_dense(np.asarray(d)[:64]))
+    assert all(
+        "reorder" not in c.param_dict
+        for c in enumerate_candidates(feats_rect, reorders=("rcm",))
+    )
+
+    x = np.random.default_rng(10).standard_normal(a.shape[1]).astype(np.float32)
+    ref = d @ x
+    for cand in rcm_cands:
+        op = SparseOperator.from_candidate(a, cand)
+        got = np.asarray(op @ jnp.asarray(x))
+        np.testing.assert_allclose(got, ref, atol=2e-3, err_msg=cand.key())
+
+
+def test_plan_invalidates_on_backend_or_scale_mismatch(tmp_path):
+    """Satellite: a plan is a point measurement at one (backend, scale);
+    serving it elsewhere must be a cache miss, not a silent reuse."""
+    _, a = small_csr(seed=11)
+    cache = PlanCache(tmp_path / "plans.json")
+    op = SparseOperator.build(a, cache=cache, warmup=0, timed=1)
+    fp = fingerprint(a)
+    m, n, nnz = a.shape[0], a.shape[1], a.nnz
+    assert op.plan.backend != "" and op.plan.scale == [m, n, nnz]
+    fresh = PlanCache(tmp_path / "plans.json")
+    assert fresh.get(fp, "spmv", 1) is not None  # context-free fetch works
+    hit = fresh.get(fp, "spmv", 1, backend=op.plan.backend, scale=[m, n, nnz])
+    assert hit is not None
+    assert fresh.get(fp, "spmv", 1, backend="not-a-backend") is None
+    assert fresh.get(fp, "spmv", 1, scale=[m, n, nnz + 1]) is None
+    # build() asserts its own context, so a poisoned entry re-searches.
+    bad = hit
+    bad.backend = "tpu"
+    fresh.put(bad)
+    op2 = SparseOperator.build(a, cache=PlanCache(tmp_path / "plans.json"),
+                               warmup=0, timed=1)
+    assert not op2.from_cache
+
+
+def test_spmm_search_space_has_sell_tier():
+    """The k dimension grew into SELL: spmm enumeration carries sell/ref
+    candidates (covered against the oracle by the sweep test above)."""
+    _, a = small_csr(seed=12)
+    cands = enumerate_candidates(extract(a, k=8), kind="spmm")
+    assert any(c.fmt == "sell" and c.impl == "ref" for c in cands)
+    assert not any(c.fmt == "sell" and c.impl == "pallas" for c in cands)
+
+
 def test_built_operator_matches_oracle_spmv_and_spmm_fallback():
     d, a = small_csr(seed=7)
     op = SparseOperator.build(a, cache=PlanCache(), warmup=0, timed=1)
