@@ -28,6 +28,7 @@ def main() -> None:
         fig10_arch_comparison,
         fig11_autotune,
         fig12_engine,
+        fig13_mesh_engine,
         table2_register_blocking,
     )
 
@@ -44,6 +45,7 @@ def main() -> None:
         "fig10": fig10_arch_comparison,
         "fig11": fig11_autotune,
         "fig12": fig12_engine,
+        "fig13": fig13_mesh_engine,  # shard sweep adapts to visible devices
     }
     only = set(args.only.split(",")) if args.only else None
     lines: list = ["name,us_per_call,derived"]

@@ -32,7 +32,10 @@ from .compat import shard_map as _shard_map
 from .spmv import _rows_from_indptr
 
 __all__ = ["allgather_spmm", "ring_spmm", "local_spmm", "stacked_spmm",
-           "assemble_rows"]
+           "assemble_rows", "SCHEDULES", "build_mesh_operand",
+           "place_mesh_operand", "mesh_spmm_runner"]
+
+SCHEDULES = ("allgather", "ring")
 
 
 def local_spmm(shard: dict[str, Any], x: jax.Array, n_rows: int) -> jax.Array:
@@ -143,3 +146,100 @@ def ring_spmm(mesh, axis: str, stacked_grid: dict[str, Any], x_sharded: jax.Arra
         return acc[None]
 
     return run(stacked_grid, x_sharded)
+
+
+# ---------------------------------------------------------------------------
+# Mesh operands: host-side partition + stack for one collective schedule
+# ---------------------------------------------------------------------------
+def build_mesh_operand(a, n_shards: int, schedule: str) -> dict[str, Any]:
+    """Partition ``a`` for one collective schedule; host arrays only.
+
+    * ``allgather`` — nnz-balanced row shards (``partition.rows_balanced``),
+      each holding global column indices; x is gathered whole per shard.
+    * ``ring`` — an (P x P) row-slab x col-slab grid
+      (``partition.grid_2d`` + ``stack_grid_shards``): shard p starts with
+      x-slab p and rotates slabs with ``ppermute``, multiplying the matching
+      column slab each step.  Columns are zero-padded to a multiple of P so
+      the x-slabs divide the mesh axis evenly (the padded tail of x is zero
+      and no stored entry references it).
+
+    Returns the stacked arrays plus assembly metadata (``shard_rows``,
+    ``n_pad``); :func:`place_mesh_operand` moves the arrays onto a mesh.
+    """
+    from .formats import CSRMatrix
+    from .partition import grid_2d, rows_balanced, stack_csr_shards, \
+        stack_grid_shards
+
+    P_ = int(n_shards)
+    m, n = a.shape
+    n_pad = -(-n // P_) * P_
+    if schedule == "allgather":
+        part = rows_balanced(a, P_)
+        stacked = stack_csr_shards(part.shards)
+        shard_rows = np.diff(part.bounds)
+    elif schedule == "ring":
+        a_pad = a if n_pad == n else CSRMatrix(
+            (m, n_pad), a.indptr, a.indices, a.data
+        )
+        stacked = stack_grid_shards(grid_2d(a_pad, (P_, P_)))
+        shard_rows = stacked["n_rows"].astype(np.int64)
+    else:
+        raise ValueError(f"unknown schedule {schedule!r}; use one of {SCHEDULES}")
+    arrays = {key: stacked[key] for key in ("indptr", "indices", "data")}
+    return {
+        "schedule": schedule,
+        "n_shards": P_,
+        "arrays": arrays,
+        "shard_rows": shard_rows,
+        "n_pad": n_pad,
+        "shape": (m, n),
+    }
+
+
+def place_mesh_operand(prep: dict[str, Any], mesh, axis: str) -> dict[str, Any]:
+    """Move a :func:`build_mesh_operand` result's arrays onto the mesh.
+
+    The leading (row-shard) dim goes over ``axis``; the ring grid's col-slab
+    dim stays local to each shard.
+    """
+    sharding = jax.sharding.NamedSharding(mesh, P(axis))
+    placed = {
+        key: jax.device_put(jnp.asarray(v), sharding)
+        for key, v in prep["arrays"].items()
+    }
+    return {**prep, "placed": placed}
+
+
+def mesh_spmm_runner(mesh, axis: str, prep: dict[str, Any]):
+    """Bind a placed mesh operand into ``fn(x) -> y`` for serving.
+
+    ``x`` may be (n,) or (n, k); it is zero-padded to the schedule's padded
+    column count, row-sharded over ``axis``, pushed through the shard_map
+    program, and the padded per-shard row slabs are stitched back into the
+    original row order.  Everything past the placement — padding, the
+    collective schedule, and the slab stitch (``shard_rows``/``n_pad`` are
+    static host constants) — compiles into ONE jitted program, so a mesh
+    dispatch costs one launch plus the ingest device_put.
+    """
+    P_ = prep["n_shards"]
+    n_pad = prep["n_pad"]
+    shard_rows = prep["shard_rows"]
+    placed = prep["placed"]
+    sched = allgather_spmm if prep["schedule"] == "allgather" else ring_spmm
+    x_sharding = jax.sharding.NamedSharding(mesh, P(axis))
+
+    @jax.jit
+    def run(operand, x2):
+        if x2.shape[0] < n_pad:
+            pad = jnp.zeros((n_pad - x2.shape[0], x2.shape[1]), x2.dtype)
+            x2 = jnp.concatenate([x2, pad], axis=0)
+        ys = sched(mesh, axis, operand, x2).reshape(P_, -1, x2.shape[1])
+        return assemble_rows(ys, shard_rows)
+
+    def fn(x):
+        x2 = x[:, None] if x.ndim == 1 else x
+        y = run(placed, jax.device_put(x2, x_sharding) if x2.shape[0] == n_pad
+                else x2)
+        return y[:, 0] if x.ndim == 1 else y
+
+    return fn

@@ -21,7 +21,8 @@ import numpy as np
 
 from .formats import CSRMatrix
 
-__all__ = ["rows_balanced", "RowPartition", "grid_2d", "stack_csr_shards"]
+__all__ = ["rows_balanced", "RowPartition", "grid_2d", "stack_csr_shards",
+           "stack_grid_shards"]
 
 
 @dataclasses.dataclass
@@ -111,4 +112,33 @@ def stack_csr_shards(shards: list[CSRMatrix]) -> dict[str, np.ndarray]:
         indices[p, : s.nnz] = s.indices
         data[p, : s.nnz] = s.data
         n_rows[p] = r
+    return {"indptr": indptr, "indices": indices, "data": data, "n_rows": n_rows}
+
+
+def stack_grid_shards(grid: list[list[CSRMatrix]]) -> dict[str, np.ndarray]:
+    """Pad an (R x C) CSR grid to common (rows, nnz) and stack to (R, C, ...).
+
+    The ring schedule's operand: leading dim R is the row-shard dim (placed
+    over the mesh axis), dim C the locally-held column slabs rotated against.
+    All cells share one padded row count and nnz so the whole grid is three
+    rectangular device arrays; ``n_rows`` is the per-row-slab valid count
+    (identical across a row, used by :func:`~.distributed.assemble_rows`).
+    """
+    R, C = len(grid), len(grid[0])
+    cells = [c for row in grid for c in row]
+    max_rows = max(c.shape[0] for c in cells)
+    max_nnz = max(c.nnz for c in cells)
+    proto = cells[0]
+    indptr = np.zeros((R, C, max_rows + 1), dtype=proto.indptr.dtype)
+    indices = np.zeros((R, C, max_nnz), dtype=proto.indices.dtype)
+    data = np.zeros((R, C, max_nnz), dtype=proto.data.dtype)
+    n_rows = np.zeros((R,), dtype=np.int32)
+    for i, row in enumerate(grid):
+        n_rows[i] = row[0].shape[0]
+        for j, cell in enumerate(row):
+            r = cell.shape[0]
+            indptr[i, j, : r + 1] = cell.indptr
+            indptr[i, j, r + 1 :] = cell.indptr[-1]
+            indices[i, j, : cell.nnz] = cell.indices
+            data[i, j, : cell.nnz] = cell.data
     return {"indptr": indptr, "indices": indices, "data": data, "n_rows": n_rows}

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_mesh", "batch_axes"]
+__all__ = ["make_production_mesh", "make_mesh", "make_spmm_mesh", "batch_axes"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -24,6 +24,26 @@ def make_mesh(pods: int = 1, data: int = 16, model: int = 16):
     if pods > 1:
         return jax.make_mesh((pods, data, model), ("pod", "data", "model"))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_spmm_mesh(n_shards: int, *, axis: str = "shard"):
+    """1-D mesh over the first ``n_shards`` devices for the sparse engine.
+
+    Unlike the LM meshes above this deliberately takes a *prefix* of the
+    device list, so shard-count sweeps (benchmarks/fig13) can compare
+    P in {1, 2, 4, 8} inside one process without re-initializing jax.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devices = jax.devices()
+    if n_shards > len(devices):
+        raise ValueError(
+            f"asked for {n_shards} shards but only {len(devices)} devices are "
+            f"visible (set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            f"before jax initializes to fake more on CPU)"
+        )
+    return Mesh(np.asarray(devices[:n_shards]), (axis,))
 
 
 def batch_axes(mesh) -> tuple[str, ...]:

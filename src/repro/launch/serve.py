@@ -14,7 +14,14 @@ first launch searches every bucket; plans persist in the on-disk plan cache
 engine reloads the whole k-indexed plan table without re-searching:
 
   PYTHONPATH=src python -m repro.launch.serve --sparse cant --requests 64 \
-      --k-buckets 1,4,16,64 [--shards 4]
+      --k-buckets 1,4,16,64 [--shards 4] [--mesh-shards 4] [--max-wait-ms 5]
+
+``--mesh-shards P`` serves over a real device mesh: A is partitioned over a
+1-D mesh axis and each k-bucket's plan picks between the allgather and ring
+collective schedules through the tuner (plans are cached per topology, so
+restarting on the same mesh skips the search).  ``--max-wait-ms`` enables
+admission control: a partial bucket dispatches once its oldest request has
+waited that long instead of waiting for the bucket to fill.
 """
 from __future__ import annotations
 
@@ -39,24 +46,58 @@ def serve_sparse(args) -> None:
         )
     ks = tuple(int(k) for k in args.k_buckets.split(","))
     a = generate(args.sparse, scale=args.scale)
+    max_wait_s = args.max_wait_ms / 1e3 if args.max_wait_ms else None
     t0 = time.perf_counter()
-    eng = SparseEngine(a, ks=ks, n_shards=args.shards)  # on-disk plan cache
+    if args.mesh_shards > 1:
+        if args.shards > 1:
+            raise SystemExit("--shards and --mesh-shards are mutually "
+                             "exclusive (single-device vmap vs device mesh)")
+        from repro.launch.mesh import make_spmm_mesh
+        from repro.launch.shardspecs import sparse_rhs_sharding
+
+        mesh = make_spmm_mesh(args.mesh_shards)
+        eng = SparseEngine(a, ks=ks, mesh=mesh, max_wait_s=max_wait_s)
+    else:
+        mesh = None
+        eng = SparseEngine(a, ks=ks, n_shards=args.shards,
+                           max_wait_s=max_wait_s)  # on-disk plan cache
     t_build = time.perf_counter() - t0
     rng = np.random.default_rng(0)
     xs = [
         jnp.asarray(rng.standard_normal(a.shape[1]).astype(np.float32))
         for _ in range(args.requests)
     ]
+    if mesh is not None:
+        # Pre-place request vectors row-sharded on the mesh so ingest is
+        # paid once, outside the dispatch hot path.
+        import jax
+
+        x_sharding = sparse_rhs_sharding(mesh, eng.axis)
+        if a.shape[1] % args.mesh_shards == 0:
+            xs = [jax.device_put(x, x_sharding) for x in xs]
     eng.run(xs[: min(len(xs), max(ks))])  # compile outside the timed window
     eng.stats = type(eng.stats)()  # measure the steady state only
     t0 = time.perf_counter()
     reqs = [eng.submit(x) for x in xs]  # offered load: all pending at once
-    eng.drain()
+    if max_wait_s is None:
+        eng.drain()
+    else:
+        # Serve through the admission gate: full buckets dispatch at once,
+        # the partial tail waits out its SLO (observable as a ~max_wait_ms
+        # latency floor on the last batch) instead of being force-flushed.
+        while eng.pending:
+            if eng.step() == 0:
+                time.sleep(min(max_wait_s / 4, 1e-3))
     dt = time.perf_counter() - t0
     flops = 2 * a.nnz * len(xs)
     s = eng.stats.summary()
     plans = {k: op.plan.candidate.key() for k, op in eng.ops.items()}
-    if args.shards > 1:
+    if args.mesh_shards > 1:
+        hit = "plan table from cache" if eng.from_cache else (
+            f"schedules searched in {t_build:.1f}s")
+        src = (f"mesh-sharded over {args.mesh_shards} devices "
+               f"(collective schedules per bucket; {hit})")
+    elif args.shards > 1:
         src = f"row-partitioned stacked dispatch over {args.shards} shards"
     elif eng.from_cache:
         src = "k-indexed plan table from cache"
@@ -120,6 +161,14 @@ def main():
     ap.add_argument("--shards", type=int, default=1,
                     help="row-partition the matrix and dispatch shards "
                          "under one batched vmap (core.distributed)")
+    ap.add_argument("--mesh-shards", type=int, default=1,
+                    help="serve over a real device mesh: shard A over a 1-D "
+                         "mesh axis and tune a collective schedule "
+                         "(allgather/ring) per k-bucket")
+    ap.add_argument("--max-wait-ms", type=float, default=0.0,
+                    help="admission control: dispatch a partial bucket once "
+                         "its oldest request has waited this long "
+                         "(0 = dispatch immediately)")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)

@@ -29,8 +29,21 @@ __all__ = [
     "opt_shardings",
     "batch_shardings",
     "decode_state_shardings",
+    "sparse_rhs_sharding",
     "rules_for",
 ]
+
+
+def sparse_rhs_sharding(mesh, axis: str) -> NamedSharding:
+    """Row-over-``axis`` sharding for the sparse serving path's RHS vectors.
+
+    Launchers pre-place request vectors with this so ingest happens once,
+    off the dispatch hot path (the mesh runner's own device_put then finds
+    them already laid out).  It mirrors the P(axis) placement
+    ``core.distributed`` constructs for its operands and RHS internally —
+    duplicated here only because core cannot depend on launch.
+    """
+    return NamedSharding(mesh, P(axis))
 
 
 def rules_for(mesh) -> MeshRules:

@@ -88,7 +88,16 @@ class SparseFFNConfig:
     # dense-block einsum), or "auto" — resolved to one of the two by
     # tune_sparse_ffn, which routes the weight matrices through
     # repro.tune.SparseOperator's measured search at serve/launch time.
+    # W1 ((d_ff, d_model), wide output) and W2 ((d_model, d_ff), wide
+    # input) have different structures, so they tune independently:
+    # impl drives W1, impl_w2 drives W2 (None = follow impl).
     impl: str = "pallas"
+    impl_w2: str | None = None
+
+    def impl_for(self, which: str) -> str:
+        if which == "w2" and self.impl_w2 is not None:
+            return self.impl_w2
+        return self.impl
 
 
 def sparse_ffn_init(
@@ -162,10 +171,10 @@ def sparse_ffn_apply(p, x, cfg: SparseFFNConfig, d_ff: int):
         bm, bk = cfg.block
 
         def mm(which, x_blocked, n_block_rows):
-            """One sparse weight matmul on the tier cfg.impl selected
+            """One sparse weight matmul on this weight's selected tier
             ("pallas" kernel, or the XLA dense-block einsum — the tier
-            tune_sparse_ffn's measured search picks on CPU)."""
-            if cfg.impl == "pallas":
+            tune_sparse_ffn's measured search picks per weight on CPU)."""
+            if cfg.impl_for(which) == "pallas":
                 from repro.kernels.bcsr_spmm import bcsr_spmm_pallas
 
                 return bcsr_spmm_pallas(
@@ -224,22 +233,29 @@ def sparse_ffn_weight_csr(p: dict, which: str, cfg: SparseFFNConfig,
 
 def tune_sparse_ffn(cfg: SparseFFNConfig, p: dict, d_model: int, d_ff: int,
                     *, k: int = 16, cache=None, **build_kwargs) -> SparseFFNConfig:
-    """Resolve ``impl="auto"`` by routing the W1 weight through the tuner.
+    """Resolve ``impl="auto"`` by routing each weight through the tuner.
 
-    Builds the weight's CSR form, runs :class:`repro.tune.SparseOperator`'s
-    measured SpMM search at width ``k`` (the expected tokens-per-step), and
-    maps the winning plan back onto the FFN's execution tiers: a bcsr/pallas
+    W1 and W2 are separate searches: they have transposed shapes and
+    independent seeded block patterns, so the winning tier can differ (the
+    plan cache keys them by their own structure fingerprints).  For each
+    weight the CSR form runs :class:`repro.tune.SparseOperator`'s measured
+    SpMM search at width ``k`` (the expected tokens-per-step), and the
+    winning plan maps back onto the FFN's execution tiers: a bcsr/pallas
     win keeps the Pallas kernel, anything else (CSR gather, BCSR einsum —
     the usual CPU outcome, where Pallas runs in interpret mode) selects the
-    XLA "ref" tier.  The plan lands in the shared cache, so a restarted
-    server skips the search.
+    XLA "ref" tier.  Both plans land in the shared cache, so a restarted
+    server skips both searches.
     """
     from repro.tune import SparseOperator
 
     if cfg.kind != "bcsr" or cfg.impl != "auto":
         return cfg
-    a = sparse_ffn_weight_csr(p, "w1", cfg, d_model, d_ff)
-    op = SparseOperator.build(a, k=max(int(k), 2), cache=cache, **build_kwargs)
-    plan = op.plan
-    impl = "pallas" if (plan.fmt, plan.impl) == ("bcsr", "pallas") else "ref"
-    return dataclasses.replace(cfg, impl=impl)
+
+    def resolve(which: str) -> str:
+        a = sparse_ffn_weight_csr(p, which, cfg, d_model, d_ff)
+        op = SparseOperator.build(a, k=max(int(k), 2), cache=cache,
+                                  **build_kwargs)
+        plan = op.plan
+        return "pallas" if (plan.fmt, plan.impl) == ("bcsr", "pallas") else "ref"
+
+    return dataclasses.replace(cfg, impl=resolve("w1"), impl_w2=resolve("w2"))

@@ -21,6 +21,19 @@ Row-partitioned mode (``n_shards > 1``) routes batches through
 ``core.partition.rows_balanced`` and every shard runs under one vmapped
 dispatch — the same aggregation idea applied across the row dimension.
 
+Mesh mode (``mesh=``/``axis=``) is the real distributed serving path: A is
+partitioned across the mesh axis (``core.partition`` + ``core.distributed``)
+and every k-bucket's dispatch runs under shard_map, with the tuner choosing
+*per bucket* between the allgather and ring collective schedules (the
+schedule is a candidate dimension; plans record the mesh topology, so a
+restart on the same mesh reloads the whole per-(k, mesh_shape) table and a
+topology change re-searches).
+
+``max_wait_s`` adds admission control: ``step()`` holds a partial bucket
+back while more requests may still arrive, but dispatches it as soon as the
+oldest pending request has waited that long — a single request under SLO
+never waits for a wide bucket to fill.
+
     eng = SparseEngine(a)            # tunes (or cache-loads) all buckets
     reqs = [eng.submit(x) for x in xs]
     eng.drain()                      # dispatches k-bucketed batches
@@ -117,9 +130,14 @@ class SparseEngine:
 
     ``ks`` are the tuned batch widths (ascending); ``cache`` is the shared
     plan cache (defaults to the on-disk one, so engine restarts skip the
-    measured search).  ``n_shards > 1`` switches every dispatch to the
-    row-partitioned ``stacked_spmm`` path (CSR shards under one vmap); the
-    tuned plan table is skipped entirely in that mode.  Remaining keyword
+    measured search).  ``mesh=``/``axis=`` runs every bucket on a device
+    mesh: A is partitioned over ``axis`` and each bucket's plan picks a
+    collective schedule (allgather vs ring) through the measured search,
+    dispatching under shard_map.  ``n_shards > 1`` (single-device) switches
+    every dispatch to the row-partitioned ``stacked_spmm`` path (CSR shards
+    under one vmap); the tuned plan table is skipped entirely in that mode.
+    ``max_wait_s`` caps how long a request may wait for its bucket to fill
+    (None keeps the dispatch-immediately behavior).  Remaining keyword
     arguments (warmup/timed/force_search/include_reorder/...) pass through
     to :meth:`SparseOperator.build`.
     """
@@ -131,6 +149,9 @@ class SparseEngine:
         ks: Sequence[int] = K_BUCKETS,
         cache: PlanCache | None = None,
         n_shards: int = 1,
+        mesh: Any = None,
+        axis: str | None = None,
+        max_wait_s: float | None = None,
         **build_kwargs: Any,
     ):
         if not ks:
@@ -138,8 +159,21 @@ class SparseEngine:
         self.a = a
         self.shape = a.shape
         self.ks = tuple(sorted({int(k) for k in ks}))
+        self.mesh = mesh
+        self.axis = axis if axis is not None else (
+            mesh.axis_names[0] if mesh is not None else None
+        )
+        self.max_wait_s = max_wait_s
         self.n_shards = int(n_shards)
-        if self.n_shards > 1:
+        if mesh is not None:
+            if n_shards > 1:
+                raise ValueError("mesh= and n_shards= are mutually exclusive")
+            self.n_shards = int(mesh.shape[self.axis])
+            self.ops = SparseOperator.build_multi(
+                a, ks=self.ks, cache=cache, mesh=mesh, axis=self.axis,
+                **build_kwargs,
+            )
+        elif self.n_shards > 1:
             # Row-partitioned mode dispatches through stacked_spmm for every
             # bucket; don't pay the per-bucket measured search for plans that
             # would never run.
@@ -188,14 +222,27 @@ class SparseEngine:
         bucket = next(k for k in self.ks if k >= take)
         return bucket, take
 
-    def step(self) -> int:
+    def step(self, *, force: bool = False) -> int:
         """Dispatch one aggregated batch; returns #requests served (0 = idle).
 
         Takes up to max(ks) pending requests, rounds the count up to the
         smallest k-bucket and pads the RHS with zero columns, then runs the
-        bucket's tuned plan (or the row-partitioned stacked dispatch).
+        bucket's tuned plan (or the sharded dispatch).
+
+        Admission control: with ``max_wait_s`` set, a partial bucket (fewer
+        pending than max(ks)) is held back — step() returns 0 — until the
+        oldest pending request has waited ``max_wait_s``, then dispatched
+        as-is (rounded up to its bucket).  ``force=True`` (used by drain)
+        bypasses the wait and flushes immediately.
         """
         if not self._queue:
+            return 0
+        if (
+            not force
+            and self.max_wait_s is not None
+            and len(self._queue) < self.ks[-1]
+            and time.perf_counter() - self._queue[0].t_submit < self.max_wait_s
+        ):
             return 0
         bucket, take = self._bucket_for(len(self._queue))
         reqs = [self._queue.popleft() for _ in range(take)]
@@ -217,7 +264,7 @@ class SparseEngine:
         return take
 
     def _dispatch_one(self, x: jax.Array) -> jax.Array:
-        if self.n_shards > 1:
+        if self.mesh is None and self.n_shards > 1:
             ys = stacked_spmm(self._stacked, x[:, None])
             return assemble_rows(ys, self._shard_rows)[:, 0]
         return self.ops[1] @ x
@@ -228,30 +275,40 @@ class SparseEngine:
         The column stack, zero-padding and the plan's kernel compile into a
         single XLA program, so an aggregated dispatch costs one launch —
         eager stack/pad overhead would otherwise eat the amortization on
-        small matrices.
+        small matrices.  Mesh-mode buckets stack eagerly instead: the mesh
+        runner pads and places the RHS on the mesh itself before its jitted
+        shard_map program runs.
         """
         fn = self._batch_fns.get(bucket)
         if fn is None:
-            if self.n_shards > 1:
+            if self.mesh is None and self.n_shards > 1:
                 stacked, rows = self._stacked, self._shard_rows
 
                 def raw(cols):
                     ys = stacked_spmm(stacked, jnp.stack(cols, axis=1))
                     return assemble_rows(ys, rows)
             else:
-                run = self.ops[bucket]._run  # the plan's bound kernel
+                run = self.ops[bucket]._run  # plan kernel / shard_map runner
 
                 def raw(cols):
                     return run(jnp.stack(cols, axis=1))
 
-            fn = self._batch_fns[bucket] = jax.jit(raw)
+            # Mesh runners place + jit internally (the stack stays eager);
+            # the single-device paths fuse stack+pad+kernel into one jit.
+            fn = self._batch_fns[bucket] = (
+                raw if self.mesh is not None else jax.jit(raw)
+            )
         return fn
 
     def drain(self) -> int:
-        """Dispatch until the queue is empty; returns #requests served."""
+        """Dispatch until the queue is empty; returns #requests served.
+
+        Draining is an explicit flush: it bypasses the ``max_wait_s``
+        admission gate (the caller has decided no more requests are coming).
+        """
         served = 0
         while True:
-            n = self.step()
+            n = self.step(force=True)
             if n == 0:
                 return served
             served += n

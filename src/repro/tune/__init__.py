@@ -12,8 +12,10 @@ from .candidates import (
     DEFAULT_PRUNE_FACTOR,
     REORDER_METHODS,
     SELL_SIGMAS,
+    SCHEDULES,
     bcsr_block_count,
     enumerate_candidates,
+    enumerate_mesh_candidates,
     estimate_cost,
     make,
     prune,
@@ -34,6 +36,7 @@ __all__ = [
     "Plan",
     "PlanCache",
     "REORDER_METHODS",
+    "SCHEDULES",
     "SELL_SIGMAS",
     "SparseOperator",
     "TIMED",
@@ -41,6 +44,7 @@ __all__ = [
     "bcsr_block_count",
     "default_cache",
     "enumerate_candidates",
+    "enumerate_mesh_candidates",
     "estimate_cost",
     "extract",
     "fingerprint",

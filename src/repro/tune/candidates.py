@@ -21,6 +21,7 @@ from typing import Any, Iterable
 
 import numpy as np
 
+from repro.core.distributed import SCHEDULES
 from repro.core.formats import CSRMatrix
 from repro.core.metrics import spmm_app_bytes, spmv_app_bytes
 
@@ -31,6 +32,7 @@ __all__ = [
     "make",
     "split_reorder",
     "enumerate_candidates",
+    "enumerate_mesh_candidates",
     "estimate_cost",
     "prune",
     "sell_padded_slots",
@@ -39,12 +41,16 @@ __all__ = [
     "SELL_SIGMAS",
     "BCSR_BLOCKS",
     "REORDER_METHODS",
+    "SCHEDULES",
+    "RING_STEP_OVERHEAD_BYTES",
 ]
 
 SELL_SIGMAS = (1, 64, 256)
 BCSR_BLOCKS = ((8, 8), (8, 16), (8, 128))  # Table 2's TPU-tile adaptation
 DEFAULT_PRUNE_FACTOR = 3.0
 REORDER_METHODS = ("rcm",)  # paper §4.4; opt-in via enumerate(reorders=...)
+# SCHEDULES (re-exported above) is owned by core.distributed: the module
+# that implements a collective schedule is the one that names it.
 
 # Impl throughput penalties (multiplies the byte estimate).  "scalar" is the
 # paper's unvectorized -O1 tier; "pallas" on the CPU backend runs the kernels
@@ -61,14 +67,21 @@ INTERPRET_SLOWDOWN = 256.0
 # bandwidth models are predictive.
 OVERHEAD_BYTES = 4 * 1024 * 1024
 
+# Per-rotation cost of the ring schedule in equivalent bytes: each of the P
+# steps issues a ppermute + one slab SpMM, so the ring pays P small launches
+# where allgather pays one collective.  The flip side (modelled below) is
+# that the rotation bytes overlap the slab compute instead of serializing
+# ahead of it.
+RING_STEP_OVERHEAD_BYTES = 512 * 1024
+
 
 @dataclasses.dataclass(frozen=True)
 class Candidate:
     """One point of the search space; params is a sorted tuple of pairs so
     the dataclass stays hashable (dict-valued params would not be)."""
 
-    fmt: str  # csr | sell | sell_blocked | bcsr
-    impl: str  # scalar | vector | ref | pallas
+    fmt: str  # csr | sell | sell_blocked | bcsr | dist (mesh schedules)
+    impl: str  # scalar | vector | ref | pallas; for dist: allgather | ring
     params: tuple = ()
 
     @property
@@ -176,6 +189,24 @@ def enumerate_candidates(
     return cands
 
 
+def enumerate_mesh_candidates(
+    feats: MatrixFeatures,
+    n_shards: int,
+    *,
+    schedules: Iterable[str] = SCHEDULES,
+) -> list[Candidate]:
+    """The collective-schedule dimension of the search space.
+
+    On a device mesh the format question collapses to local CSR (shards jit
+    under shard_map with static shapes) and the open dimension is *how x
+    reaches every shard* — the paper's "input vector distribution" future-work
+    note.  Each schedule is one candidate (``fmt="dist"``, impl names the
+    schedule); :func:`estimate_cost` separates them by collective bytes and
+    the measured search settles ties, exactly like the single-device tiers.
+    """
+    return [make("dist", s, n_shards=int(n_shards)) for s in schedules]
+
+
 # ---------------------------------------------------------------------------
 # Byte-model cost estimate (paper §4.2, generalized per format)
 # ---------------------------------------------------------------------------
@@ -275,6 +306,27 @@ def estimate_cost(
             n_blocks * (bm * bk * val_bytes + 2 * idx_bytes)  # fill-in stored
             + (m + n) * k * val_bytes
         )
+    elif cand.fmt == "dist":
+        # Collective schedules (core.distributed): per-shard stream bytes
+        # plus the traffic needed to make x visible to every shard — the
+        # multi-chip form of the paper's "same x re-fetched into 61 private
+        # L2s" observation.  Both schedules move (P-1)/P * |x| per shard;
+        # allgather pays it up-front (serialized with compute), the ring
+        # overlaps rotation with the matching col-slab SpMM at the price of
+        # P per-step launches.
+        P = max(1, int(p["n_shards"]))
+        local = (
+            spmv_app_bytes(m, n, a.nnz, val_bytes, idx_bytes)
+            if k == 1
+            else spmm_app_bytes(m, n, a.nnz, k, val_bytes, idx_bytes)
+        ) / P
+        collective = (P - 1) / P * n * k * val_bytes
+        if cand.impl == "allgather":
+            bytes_ = local + collective
+        elif cand.impl == "ring":
+            bytes_ = max(local, collective) + P * RING_STEP_OVERHEAD_BYTES
+        else:  # pragma: no cover - enumeration and cost stay in sync
+            raise ValueError(f"unknown schedule impl: {cand.impl}")
     else:  # pragma: no cover - enumeration and cost stay in sync
         raise ValueError(f"unknown candidate format: {cand.fmt}")
 

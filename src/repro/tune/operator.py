@@ -34,7 +34,12 @@ from repro.core.spmv import (
 )
 
 from .candidates import Candidate, enumerate_candidates, estimate_cost, prune
-from .candidates import DEFAULT_PRUNE_FACTOR, REORDER_METHODS, split_reorder
+from .candidates import (
+    DEFAULT_PRUNE_FACTOR,
+    REORDER_METHODS,
+    enumerate_mesh_candidates,
+    split_reorder,
+)
 from .features import MatrixFeatures, extract
 from .plan import Plan, PlanCache, default_cache, fingerprint
 from .timing import time_fn
@@ -45,8 +50,23 @@ __all__ = ["SparseOperator", "prepare", "runner"]
 # ---------------------------------------------------------------------------
 # Prepare + dispatch per candidate
 # ---------------------------------------------------------------------------
-def prepare(a: CSRMatrix, cand: Candidate) -> dict[str, Any]:
-    """Host-side format construction for one candidate."""
+def prepare(
+    a: CSRMatrix,
+    cand: Candidate,
+    *,
+    mesh=None,
+    axis: str | None = None,
+    prep_cache: dict | None = None,
+) -> dict[str, Any]:
+    """Host-side format construction for one candidate.
+
+    ``fmt="dist"`` candidates (collective schedules) additionally need the
+    target ``mesh``/``axis`` so the stacked shard arrays land row-sharded on
+    the device mesh.  ``prep_cache`` (keyed by schedule) shares the placed
+    operand across calls for the same matrix: the engine's k-buckets differ
+    only in RHS width, so one partition+placement per schedule serves every
+    bucket instead of holding per-bucket copies on the devices.
+    """
     from repro.kernels import ops as kops
 
     method, base = split_reorder(cand)
@@ -58,6 +78,20 @@ def prepare(a: CSRMatrix, cand: Candidate) -> dict[str, Any]:
         return {"perm": perm, "matrix": ar, "inner": prepare(ar, base)}
 
     p = cand.param_dict
+    if cand.fmt == "dist":
+        from repro.core.distributed import build_mesh_operand, place_mesh_operand
+
+        if mesh is None or axis is None:
+            raise ValueError("dist candidates need mesh= and axis=")
+        key = (cand.impl, int(p["n_shards"]))
+        if prep_cache is not None and key in prep_cache:
+            return prep_cache[key]
+        prep = place_mesh_operand(
+            build_mesh_operand(a, int(p["n_shards"]), cand.impl), mesh, axis
+        )
+        if prep_cache is not None:
+            prep_cache[key] = prep
+        return prep
     if cand.fmt == "csr":
         return {"dev": a.device()}
     if cand.fmt == "sell":
@@ -79,15 +113,29 @@ def prepare(a: CSRMatrix, cand: Candidate) -> dict[str, Any]:
 
 
 def runner(
-    a: CSRMatrix, cand: Candidate, prep: dict[str, Any], *, k: int = 1
+    a: CSRMatrix,
+    cand: Candidate,
+    prep: dict[str, Any],
+    *,
+    k: int = 1,
+    mesh=None,
+    axis: str | None = None,
 ) -> Callable[[jax.Array], jax.Array]:
     """Bind a candidate + prepared arrays into ``fn(x) -> y``.
 
     k == 1 binds the SpMV path (x is (n,)); k > 1 binds SpMM (x is (n, k)).
+    ``fmt="dist"`` candidates dispatch through the mesh's shard_map schedule
+    and accept either shape (the engine's k-buckets share one runner).
     """
     from repro.kernels import ops as kops
 
     m, n = a.shape
+    if cand.fmt == "dist":
+        from repro.core.distributed import mesh_spmm_runner
+
+        if mesh is None or axis is None:
+            raise ValueError("dist candidates need mesh= and axis=")
+        return mesh_spmm_runner(mesh, axis, prep)
     method, base = split_reorder(cand)
     if method is not None:
         # y = A x == P^T (PAP^T) (P x): gather x by the permutation, run the
@@ -174,6 +222,8 @@ class SparseOperator:
         from_cache: bool,
         features: MatrixFeatures | None = None,
         measurements: dict[str, float] | None = None,
+        mesh=None,
+        axis: str | None = None,
     ):
         self.a = a
         self.plan = plan
@@ -181,8 +231,10 @@ class SparseOperator:
         self.from_cache = from_cache  # True -> the measured search was skipped
         self.features = features
         self.measurements = dict(measurements or {})  # candidate key -> seconds
+        self.mesh = mesh
+        self.axis = axis
         self._prep = prep
-        self._run = runner(a, plan.candidate, prep, k=plan.k)
+        self._run = runner(a, plan.candidate, prep, k=plan.k, mesh=mesh, axis=axis)
         self._csr_dev: dict | None = prep.get("dev")  # fallback path, lazy
 
     # -- construction -------------------------------------------------------
@@ -199,6 +251,9 @@ class SparseOperator:
         timed: int = 3,
         force_search: bool = False,
         include_reorder: bool = False,
+        mesh=None,
+        axis: str | None = None,
+        prep_cache: dict | None = None,
         seed: int = 0,
     ) -> "SparseOperator":
         """Autotune (or fetch the cached plan for) this matrix.
@@ -210,25 +265,47 @@ class SparseOperator:
         (paper §4.4).  Cached plans are point measurements: a plan recorded
         on another backend or at another (m, n, nnz) is invalidated and the
         search re-runs.
+
+        ``mesh=``/``axis=`` switch the search space to the collective
+        schedules (allgather vs ring over ``axis``): the plan records the
+        mesh topology and is cached per (fingerprint, kind, k, mesh_shape),
+        so a topology change re-searches instead of silently reusing a
+        schedule tuned for a different shard count.
         """
         kind = "spmv" if k is None else "spmm"
         kk = 1 if k is None else int(k)
         fp = fingerprint(a)
         backend = jax.default_backend()
         scale = [int(a.shape[0]), int(a.shape[1]), int(a.nnz)]
+        if mesh is not None:
+            axis = axis or mesh.axis_names[0]
+            mesh_shape = [int(s) for s in mesh.devices.shape]
+        else:
+            mesh_shape = []
         cache = default_cache() if cache is None else cache
         if not force_search:
-            plan = cache.get(fp, kind, kk, backend=backend, scale=scale)
+            plan = cache.get(fp, kind, kk, backend=backend, scale=scale,
+                             mesh_shape=mesh_shape or None)
             if plan is not None:
-                return cls(a, plan, prepare(a, plan.candidate), from_cache=True)
+                return cls(
+                    a,
+                    plan,
+                    prepare(a, plan.candidate, mesh=mesh, axis=axis,
+                            prep_cache=prep_cache),
+                    from_cache=True,
+                    mesh=mesh,
+                    axis=axis,
+                )
 
         feats = extract(a, k=kk)
-        if candidates is None:
+        if candidates is not None:
+            cands = list(candidates)
+        elif mesh is not None:
+            cands = enumerate_mesh_candidates(feats, mesh.shape[axis])
+        else:
             cands = enumerate_candidates(
                 feats, kind, reorders=REORDER_METHODS if include_reorder else ()
             )
-        else:
-            cands = list(candidates)
         costs = {c: estimate_cost(a, c, feats, k=kk) for c in cands}
         survivors = prune(costs, factor=prune_factor)
 
@@ -239,8 +316,9 @@ class SparseOperator:
         measurements: dict[str, float] = {}
         best: tuple[float, Candidate, dict] | None = None
         for c in survivors:
-            prep = prepare(a, c)
-            t = time_fn(runner(a, c, prep, k=kk), x, warmup=warmup, timed=timed)
+            prep = prepare(a, c, mesh=mesh, axis=axis, prep_cache=prep_cache)
+            fn = runner(a, c, prep, k=kk, mesh=mesh, axis=axis)
+            t = time_fn(fn, x, warmup=warmup, timed=timed)
             measurements[c.key()] = t
             if best is None or t < best[0]:
                 best = (t, c, prep)
@@ -260,6 +338,7 @@ class SparseOperator:
             k=kk,
             backend=backend,
             scale=scale,
+            mesh_shape=mesh_shape,
         )
         cache.put(plan)
         return cls(
@@ -269,6 +348,8 @@ class SparseOperator:
             from_cache=False,
             features=feats,
             measurements=measurements,
+            mesh=mesh,
+            axis=axis,
         )
 
     @classmethod
@@ -317,8 +398,13 @@ class SparseOperator:
         serving analogue of the paper's Fig 9 crossover).  All buckets share
         one plan cache: each (fingerprint, kind, k) is a separate entry, so
         a restarted engine reloads the whole table without re-searching.
+        Mesh builds also share one placed operand per collective schedule
+        across the buckets (they differ only in RHS width), instead of
+        holding a per-bucket copy of the partitioned matrix on the devices.
         """
         cache = default_cache() if cache is None else cache
+        if build_kwargs.get("mesh") is not None:
+            build_kwargs.setdefault("prep_cache", {})
         table: dict[int, SparseOperator] = {}
         for k in sorted({int(k) for k in ks}):
             if k < 1:

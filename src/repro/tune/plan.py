@@ -36,7 +36,7 @@ from .candidates import Candidate, make
 
 __all__ = ["PLAN_VERSION", "Plan", "PlanCache", "fingerprint", "default_cache"]
 
-PLAN_VERSION = 2  # v2: backend + scale recorded, mismatches invalidate
+PLAN_VERSION = 3  # v3: mesh_shape recorded, topology changes invalidate
 
 _ENV_CACHE = "REPRO_TUNE_CACHE"
 _DEFAULT_CACHE = "~/.cache/repro_tune/plans.json"
@@ -65,18 +65,34 @@ class Plan:
     k: int = 1  # dense-operand width (1 for spmv)
     backend: str = ""  # jax backend the timings were taken on ("" = unknown)
     scale: list = dataclasses.field(default_factory=list)  # [m, n, nnz]
+    # Device-mesh topology the plan was measured on ([] = single device).
+    # A collective-schedule plan tuned at one shard count is meaningless at
+    # another — the allgather/ring crossover moves with P — so a topology
+    # change is a miss, same as backend/scale.
+    mesh_shape: list = dataclasses.field(default_factory=list)
     version: int = PLAN_VERSION
 
-    def matches(self, backend: str | None, scale: Iterable[int] | None) -> bool:
+    def matches(
+        self,
+        backend: str | None,
+        scale: Iterable[int] | None,
+        mesh_shape: Iterable[int] | None = None,
+    ) -> bool:
         """True when this plan's measurement context covers the request.
 
         An empty recorded backend/scale (legacy or hand-written plans) never
         matches a concrete request: point measurements must not be trusted
-        outside the context they were taken in.
+        outside the context they were taken in.  ``mesh_shape`` is always
+        checked: None/() means the single-device context, so a mesh plan
+        never leaks into single-device serving or vice versa.
         """
         if backend is not None and self.backend != backend:
             return False
         if scale is not None and list(self.scale) != [int(s) for s in scale]:
+            return False
+        if [int(s) for s in self.mesh_shape] != [
+            int(s) for s in (mesh_shape or ())
+        ]:
             return False
         return True
 
@@ -104,13 +120,32 @@ class PlanCache:
         self._plans: dict[str, dict] = {}
         if self.path is not None and self.path.exists():
             try:
-                self._plans = json.loads(self.path.read_text())
+                self._plans = self._current(json.loads(self.path.read_text()))
             except (json.JSONDecodeError, OSError):
                 self._plans = {}  # corrupt cache: start over, never crash
 
     @staticmethod
-    def _key(fp: str, kind: str, k: int = 1) -> str:
-        return f"{fp}:{kind}:k{k}"
+    def _current(plans: Any) -> dict[str, dict]:
+        """Drop entries from other PLAN_VERSIONs (and malformed ones).
+
+        A version bump means the schema or its semantics changed; old
+        entries are dead weight that must neither be served nor crash the
+        load (v2 files predate ``mesh_shape``, for example).
+        """
+        if not isinstance(plans, dict):
+            return {}
+        return {
+            key: d
+            for key, d in plans.items()
+            if isinstance(d, dict) and d.get("version") == PLAN_VERSION
+        }
+
+    @staticmethod
+    def _key(fp: str, kind: str, k: int = 1,
+             mesh_shape: Iterable[int] = ()) -> str:
+        base = f"{fp}:{kind}:k{k}"
+        mesh = "x".join(str(int(s)) for s in mesh_shape or ())
+        return f"{base}:mesh{mesh}" if mesh else base
 
     def __len__(self) -> int:
         return len(self._plans)
@@ -123,16 +158,21 @@ class PlanCache:
         *,
         backend: str | None = None,
         scale: Iterable[int] | None = None,
+        mesh_shape: Iterable[int] | None = None,
     ) -> Plan | None:
-        """Fetch a plan; backend/scale mismatches invalidate (return None).
+        """Fetch a plan; backend/scale/topology mismatches invalidate.
 
         Passing ``backend``/``scale`` asserts the caller's measurement
         context; a cached plan taken on a different backend or at a
         different (m, n, nnz) is a stale point-measurement and is treated
-        as a miss so the caller re-searches.
+        as a miss so the caller re-searches.  ``mesh_shape`` keys mesh
+        plans separately per topology: the same fingerprint at a different
+        shard count is a miss (and never shadows the single-device plan).
         """
-        d = self._plans.get(self._key(fp, kind, k))
-        if d is None or d.get("version") != PLAN_VERSION:
+        # _current() filtered stale versions at load/merge time, so any
+        # entry present here is already PLAN_VERSION.
+        d = self._plans.get(self._key(fp, kind, k, mesh_shape or ()))
+        if d is None:
             return None
         try:
             plan = Plan.from_json(d)
@@ -140,20 +180,21 @@ class PlanCache:
             # Entry shape drifted (hand edit, or a field change without a
             # version bump): treat as a miss, never crash.
             return None
-        if not plan.matches(backend, scale):
+        if not plan.matches(backend, scale, mesh_shape):
             return None
         return plan
 
     def put(self, plan: Plan) -> None:
-        self._plans[self._key(plan.fingerprint, plan.kind, plan.k)] = plan.to_json()
+        key = self._key(plan.fingerprint, plan.kind, plan.k, plan.mesh_shape)
+        self._plans[key] = plan.to_json()
         if self.path is not None:
             self.path.parent.mkdir(parents=True, exist_ok=True)
             # Merge-then-replace so concurrent processes sharing the file
             # don't clobber plans persisted since our load (ours win ties).
+            # Stale-version entries on disk are dropped, not carried along.
             try:
-                on_disk = json.loads(self.path.read_text())
-                if isinstance(on_disk, dict):
-                    self._plans = {**on_disk, **self._plans}
+                on_disk = self._current(json.loads(self.path.read_text()))
+                self._plans = {**on_disk, **self._plans}
             except (FileNotFoundError, json.JSONDecodeError, OSError):
                 pass
             fd, tmp = tempfile.mkstemp(

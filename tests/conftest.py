@@ -6,7 +6,8 @@ to die with ModuleNotFoundError before a single test ran.  This conftest
 installs a tiny deterministic stand-in into ``sys.modules`` *before* test
 modules are imported, implementing exactly the surface those tests use:
 
-  given / settings / strategies.{composite,integers,floats,sampled_from,...}
+  given / settings / assume
+  strategies.{composite,integers,floats,sampled_from,tuples,...}
 
 Sampling is fixed-seed numpy (seeded per test from the test name), so the
 fallback is reproducible run-to-run.  When the real hypothesis is installed
@@ -67,6 +68,17 @@ def _install_hypothesis_shim() -> None:
 
         return Strategy(sample)
 
+    def tuples(*elems):
+        return Strategy(lambda rng: tuple(e.sample(rng) for e in elems))
+
+    class _Unsatisfied(Exception):
+        """Raised by assume(False); the given() loop skips the example."""
+
+    def assume(condition):
+        if not condition:
+            raise _Unsatisfied
+        return True
+
     def composite(fn):
         @functools.wraps(fn)
         def build(*args, **kwargs):
@@ -89,7 +101,10 @@ def _install_hypothesis_shim() -> None:
                 for _ in range(n):
                     args = [s.sample(rng) for s in gargs]
                     kw = {k: s.sample(rng) for k, s in gkwargs.items()}
-                    test(*args, **kw)
+                    try:
+                        test(*args, **kw)
+                    except _Unsatisfied:
+                        continue  # assume() rejected this draw
 
             wrapper._shim_given = True
             # pytest must see a zero-arg function (the strategies supply the
@@ -115,12 +130,14 @@ def _install_hypothesis_shim() -> None:
     st.just = just
     st.sampled_from = sampled_from
     st.lists = lists
+    st.tuples = tuples
     st.composite = composite
     st.Strategy = Strategy
 
     hyp = types.ModuleType("hypothesis")
     hyp.given = given
     hyp.settings = settings
+    hyp.assume = assume
     hyp.strategies = st
     hyp.__shim__ = True
 

@@ -1,0 +1,210 @@
+"""Multi-device property tier: random CSR patterns x mesh sizes x k-buckets.
+
+The mesh engine's correctness claim is that *any* (pattern, topology,
+bucket) triple gives the single-device answer — exactly the shape of claim
+property tests cover better than fixtures.  These run in-process on
+whatever devices are visible: the default single-device run exercises
+P = 1 meshes (shard_map still runs, collectives degenerate), and the CI
+multi-device lane (XLA_FLAGS=--xla_force_host_platform_device_count=8)
+sweeps P in {1, 2, 4, 8}.  Works under the real hypothesis and under the
+tests/conftest.py seeded shim (strategy surface: integers, floats,
+sampled_from, tuples, composite, assume).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import assume, given, settings, strategies as st
+
+
+from repro.core.distributed import (
+    SCHEDULES,
+    assemble_rows,
+    build_mesh_operand,
+    mesh_spmm_runner,
+    place_mesh_operand,
+)
+from repro.core.formats import csr_from_dense
+from repro.launch.mesh import make_spmm_mesh
+
+# Mesh sizes the visible device count can host: {1} on a stock run,
+# {1, 2, 4, 8} under the forced-8-device CI lane.
+MESH_SIZES = tuple(p for p in (1, 2, 4, 8) if p <= jax.device_count())
+K_WIDTHS = (1, 3, 8)
+
+
+@st.composite
+def dense_patterns(draw):
+    """A random small dense matrix with sparse support (and its seed)."""
+    m, n = draw(st.tuples(st.integers(4, 48), st.integers(4, 48)))
+    density = draw(st.floats(0.02, 0.4))
+    seed = draw(st.integers(0, 2**20))
+    rng = np.random.default_rng(seed)
+    d = ((rng.random((m, n)) < density) * rng.standard_normal((m, n))).astype(
+        np.float32
+    )
+    return d, seed
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    pattern=dense_patterns(),
+    n_shards=st.sampled_from(MESH_SIZES),
+    k=st.sampled_from(K_WIDTHS),
+)
+def test_schedules_agree_with_each_other_and_dense_oracle(pattern, n_shards, k):
+    """allgather_spmm == ring_spmm == dense oracle, any pattern/mesh/bucket.
+
+    Deliberately includes shapes not divisible by the shard count (the
+    operand builder pads columns; assemble_rows drops padded rows).
+    """
+    d, seed = pattern
+    a = csr_from_dense(d)
+    assume(a.nnz > 0)
+    rng = np.random.default_rng(seed + 1)
+    x = rng.standard_normal((d.shape[1], k)).astype(np.float32)
+    if k == 1:
+        x = x[:, 0]  # exercise the SpMV-shaped entry too
+    ref = d @ x
+
+    mesh = make_spmm_mesh(n_shards)
+    ys = {}
+    for schedule in SCHEDULES:
+        prep = place_mesh_operand(
+            build_mesh_operand(a, n_shards, schedule), mesh, "shard"
+        )
+        ys[schedule] = np.asarray(mesh_spmm_runner(mesh, "shard", prep)(
+            jnp.asarray(x)
+        ))
+        assert ys[schedule].shape == ref.shape
+        np.testing.assert_allclose(
+            ys[schedule], ref, atol=1e-4,
+            err_msg=f"{schedule} P={n_shards} k={k} shape={d.shape}",
+        )
+    np.testing.assert_allclose(
+        ys["allgather"], ys["ring"], atol=1e-4,
+        err_msg=f"schedules disagree at P={n_shards} k={k}",
+    )
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 8),
+    n_shards=st.integers(1, 6),
+    seed=st.integers(0, 2**20),
+)
+def test_assemble_rows_roundtrips_arbitrary_row_partitions(m, k, n_shards, seed):
+    """Splitting rows at arbitrary (possibly empty-shard) boundaries, padding
+    each shard to a common row count, and assembling must reproduce Y."""
+    rng = np.random.default_rng(seed)
+    y = rng.standard_normal((m, k)).astype(np.float32)
+    cuts = np.sort(rng.integers(0, m + 1, size=n_shards - 1))
+    bounds = np.concatenate([[0], cuts, [m]])
+    counts = np.diff(bounds)
+    max_rows = max(int(counts.max()), 1)
+    stacked = np.zeros((n_shards, max_rows, k), np.float32)
+    for p in range(n_shards):
+        lo, hi = int(bounds[p]), int(bounds[p + 1])
+        stacked[p, : hi - lo] = y[lo:hi]
+    got = np.asarray(assemble_rows(jnp.asarray(stacked), counts))
+    np.testing.assert_allclose(got, y, atol=0)
+
+
+@settings(max_examples=6, deadline=None)
+@given(pattern=dense_patterns(), n_shards=st.sampled_from(MESH_SIZES))
+def test_mesh_operand_builders_are_lossless(pattern, n_shards):
+    """The stacked shard arrays re-assemble to the original matrix: no entry
+    is dropped or duplicated by row partitioning, column padding, or the
+    ring grid's slab-local reindexing."""
+    d, _ = pattern
+    a = csr_from_dense(d)
+    m, n = a.shape
+    for schedule in SCHEDULES:
+        prep = build_mesh_operand(a, n_shards, schedule)
+        arrs = prep["arrays"]
+        total = np.zeros((m, prep["n_pad"]), np.float32)
+        row0 = 0
+        for p in range(n_shards):
+            rows = int(prep["shard_rows"][p])
+            cells = (
+                [(arrs["indptr"][p], arrs["indices"][p], arrs["data"][p], 0)]
+                if schedule == "allgather"
+                else [
+                    (
+                        arrs["indptr"][p, j],
+                        arrs["indices"][p, j],
+                        arrs["data"][p, j],
+                        j * (prep["n_pad"] // n_shards),
+                    )
+                    for j in range(n_shards)
+                ]
+            )
+            for indptr, indices, data, col0 in cells:
+                for r in range(rows):
+                    s, e = int(indptr[r]), int(indptr[r + 1])
+                    np.add.at(
+                        total[row0 + r], col0 + indices[s:e], data[s:e]
+                    )
+            row0 += rows
+        assert row0 == m
+        np.testing.assert_allclose(total[:, :n], d, atol=0,
+                                   err_msg=f"{schedule} P={n_shards}")
+        np.testing.assert_allclose(total[:, n:], 0.0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# The mesh engine end-to-end (deterministic; adapts to visible devices)
+# ---------------------------------------------------------------------------
+def test_mesh_engine_matches_single_device_engine():
+    """Every bucket of a mesh engine returns the single-device answer, its
+    plans are collective schedules, and they record the mesh topology."""
+    from repro.runtime.engine import SparseEngine
+    from repro.tune import PlanCache
+
+    rng = np.random.default_rng(42)
+    m = n = 120
+    d = ((rng.random((m, n)) < 0.08) * rng.standard_normal((m, n))).astype(
+        np.float32
+    )
+    a = csr_from_dense(d)
+    n_shards = MESH_SIZES[-1]
+    mesh = make_spmm_mesh(n_shards)
+    eng = SparseEngine(a, ks=(1, 4), mesh=mesh, cache=PlanCache(),
+                       warmup=0, timed=1)
+    assert eng.n_shards == n_shards
+    for k, op in eng.ops.items():
+        assert op.plan.fmt == "dist", (k, op.plan)
+        assert op.plan.impl in SCHEDULES
+        assert op.plan.mesh_shape == [n_shards]
+    xs = [rng.standard_normal(n).astype(np.float32) for _ in range(6)]
+    ys = eng.run(xs)
+    for y, x in zip(ys, xs):
+        np.testing.assert_allclose(np.asarray(y), d @ x, atol=1e-4)
+    assert eng.stats.n_requests == 6 and eng.pending == 0
+
+
+def test_mesh_engine_reloads_plan_table_per_topology(tmp_path):
+    """Restart on the same mesh is a full cache hit; the single-device table
+    on the same fingerprint is tracked independently (no cross-talk)."""
+    from repro.runtime.engine import SparseEngine
+    from repro.tune import PlanCache
+
+    rng = np.random.default_rng(7)
+    d = ((rng.random((64, 64)) < 0.1) * rng.standard_normal((64, 64))).astype(
+        np.float32
+    )
+    a = csr_from_dense(d)
+    mesh = make_spmm_mesh(MESH_SIZES[-1])
+    path = tmp_path / "plans.json"
+    eng = SparseEngine(a, ks=(1, 4), mesh=mesh, cache=PlanCache(path),
+                       warmup=0, timed=1)
+    assert not eng.from_cache
+    eng2 = SparseEngine(a, ks=(1, 4), mesh=mesh, cache=PlanCache(path))
+    assert eng2.from_cache  # per-(k, mesh_shape) table reloaded, no search
+    assert all(eng2.ops[k].plan.candidate == eng.ops[k].plan.candidate
+               for k in (1, 4))
+    # A single-device engine over the same matrix+cache must NOT see the
+    # mesh plans (and vice versa): the k=1 bucket re-searches its own plan.
+    eng3 = SparseEngine(a, ks=(1,), cache=PlanCache(path), warmup=0, timed=1)
+    assert not eng3.from_cache
+    assert eng3.ops[1].plan.fmt != "dist"

@@ -111,6 +111,41 @@ def test_sharded_engine_matches_oracle_and_stacked_entry_point():
     np.testing.assert_allclose(np.asarray(got), d @ np.asarray(X), atol=2e-3)
 
 
+def test_admission_control_lone_request_never_waits_for_wide_bucket():
+    """ROADMAP follow-up: with max_wait_s set, a lone request is held only
+    until its deadline, then dispatched as a partial (k=1) bucket — it never
+    waits for the 4-bucket to fill."""
+    import time
+
+    d, a = small(seed=20)
+    eng = engine(a, ks=(1, 4), max_wait_s=0.05)
+    x = np.random.default_rng(21).standard_normal(a.shape[1]).astype(np.float32)
+    req = eng.submit(x)
+    assert eng.step() == 0  # under SLO with a partial bucket: held back
+    assert eng.pending == 1
+    deadline = time.perf_counter() + 5.0
+    while eng.step() == 0:
+        assert time.perf_counter() < deadline, "SLO expiry never dispatched"
+        time.sleep(0.005)
+    assert req.done and req.bucket == 1  # partial bucket, not a padded 4
+    assert req.latency_s < 1.0
+    np.testing.assert_allclose(np.asarray(req.y), d @ x, atol=2e-3)
+
+
+def test_admission_control_full_bucket_dispatches_immediately():
+    d, a = small(seed=22)
+    eng = engine(a, ks=(1, 4), max_wait_s=10.0)
+    rng = np.random.default_rng(23)
+    xs = [rng.standard_normal(a.shape[1]).astype(np.float32) for _ in range(4)]
+    for x in xs:
+        eng.submit(x)
+    assert eng.step() == 4  # max(ks) pending: no reason to wait
+    # drain() is an explicit flush: it bypasses the admission gate.
+    req = eng.submit(xs[0])
+    assert eng.step() == 0
+    assert eng.drain() == 1 and req.done
+
+
 def test_batched_server_prefill_assignment():
     """_assign must prefill (one pass per prompt), not replay decode steps,
     and a B=2 server must produce the same tokens as two B=1 servers."""

@@ -192,3 +192,61 @@ def test_decode_matches_forward_all_families():
         np.testing.assert_allclose(
             np.asarray(lg2[:, 0]), np.asarray(full[:, 16]), atol=2e-4, rtol=1e-3
         )
+
+
+def test_sparse_ffn_w1_w2_tune_independently():
+    """Satellite: tune_sparse_ffn resolves W1 and W2 through separate
+    measured searches (separate fingerprints), so the two weights can land
+    on different execution tiers — and the layer computes correctly with a
+    mixed (pallas W1, ref W2) selection."""
+    import dataclasses
+
+    from repro.models.common import KeyGen
+    from repro.models.ffn import (
+        SparseFFNConfig,
+        sparse_ffn_apply,
+        sparse_ffn_init,
+        sparse_ffn_weight_csr,
+        tune_sparse_ffn,
+    )
+    from repro.tune import Plan, PlanCache, fingerprint
+
+    d_model, d_ff = 32, 64
+    cfg = SparseFFNConfig(kind="bcsr", block=(8, 8), density=0.4, impl="auto")
+    kg = KeyGen(jax.random.PRNGKey(0))
+    p = jax.tree.map(lambda x: x, sparse_ffn_init(kg, d_model, d_ff, cfg))
+    p = {k: v.value if hasattr(v, "value") else v for k, v in p.items()}
+
+    a1 = sparse_ffn_weight_csr(p, "w1", cfg, d_model, d_ff)
+    a2 = sparse_ffn_weight_csr(p, "w2", cfg, d_model, d_ff)
+    assert fingerprint(a1) != fingerprint(a2)  # independent cache entries
+
+    # Seed the cache with opposite winners for the two weights: the tuner
+    # must route each weight through its *own* fingerprint, giving a mixed
+    # per-weight tier selection.
+    cache = PlanCache()
+
+    def plant(a, fmt, impl, params):
+        cache.put(Plan(
+            fingerprint=fingerprint(a), kind="spmm", fmt=fmt, impl=impl,
+            params=params, est_cost=1.0, measured_s=1e-4, n_candidates=1,
+            n_measured=1, k=16, backend=jax.default_backend(),
+            scale=[a.shape[0], a.shape[1], a.nnz]))
+
+    plant(a1, "bcsr", "pallas", {"block": [8, 8]})
+    plant(a2, "csr", "vector", {})
+    tuned = tune_sparse_ffn(cfg, p, d_model, d_ff, k=16, cache=cache)
+    assert tuned.impl == "pallas" and tuned.impl_w2 == "ref"
+    assert tuned.impl_for("w1") != tuned.impl_for("w2")
+
+    # The mixed selection computes the same FFN as a uniform-ref config.
+    x = jnp.asarray(
+        np.random.default_rng(1).standard_normal((2, 3, d_model)), jnp.float32
+    )
+    y_mixed = sparse_ffn_apply(p, x, tuned, d_ff)
+    y_ref = sparse_ffn_apply(
+        p, x, dataclasses.replace(tuned, impl="ref", impl_w2="ref"), d_ff
+    )
+    np.testing.assert_allclose(
+        np.asarray(y_mixed), np.asarray(y_ref), atol=1e-4
+    )
