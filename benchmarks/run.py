@@ -29,6 +29,7 @@ def main() -> None:
         fig11_autotune,
         fig12_engine,
         fig13_mesh_engine,
+        fig14_imbalance,
         table2_register_blocking,
     )
 
@@ -46,6 +47,7 @@ def main() -> None:
         "fig11": fig11_autotune,
         "fig12": fig12_engine,
         "fig13": fig13_mesh_engine,  # shard sweep adapts to visible devices
+        "fig14": fig14_imbalance,
     }
     only = set(args.only.split(",")) if args.only else None
     lines: list = ["name,us_per_call,derived"]

@@ -39,8 +39,18 @@ SCHEDULES = ("allgather", "ring")
 
 
 def local_spmm(shard: dict[str, Any], x: jax.Array, n_rows: int) -> jax.Array:
-    """Local CSR SpMM on one shard's (padded) arrays. X: (n_local, k)."""
-    rows = _rows_from_indptr(shard["indptr"], shard["indices"].shape[0], n_rows)
+    """Local CSR SpMM on one shard's (padded) arrays. X: (n_local, k).
+
+    Prepared shard dicts (``partition.stack_csr_shards``/``stack_grid_shards``)
+    carry the hoisted per-nnz ``rows`` map; raw dicts fall back to deriving
+    it per dispatch (compat shim only — the hot paths never take it).
+    """
+    if "rows" in shard:
+        rows = shard["rows"]
+    else:
+        rows = _rows_from_indptr(
+            shard["indptr"], shard["indices"].shape[0], n_rows
+        )
     prod = shard["data"][:, None] * x[shard["indices"], :]
     return jax.ops.segment_sum(prod, rows, num_segments=n_rows)
 
@@ -58,7 +68,11 @@ def stacked_spmm(stacked: dict[str, Any], x: jax.Array) -> jax.Array:
     :func:`assemble_rows` to stitch the original row order back together.
     """
     n_rows = stacked["indptr"].shape[-1] - 1
-    shards = {key: stacked[key] for key in ("indptr", "indices", "data")}
+    shards = {
+        key: stacked[key]
+        for key in ("indptr", "indices", "data", "rows")
+        if key in stacked
+    }
     return jax.vmap(lambda sh: local_spmm(sh, x, n_rows))(shards)
 
 
@@ -185,7 +199,11 @@ def build_mesh_operand(a, n_shards: int, schedule: str) -> dict[str, Any]:
         shard_rows = stacked["n_rows"].astype(np.int64)
     else:
         raise ValueError(f"unknown schedule {schedule!r}; use one of {SCHEDULES}")
-    arrays = {key: stacked[key] for key in ("indptr", "indices", "data")}
+    arrays = {
+        key: stacked[key]
+        for key in ("indptr", "indices", "data", "rows")
+        if key in stacked
+    }
     return {
         "schedule": schedule,
         "n_shards": P_,

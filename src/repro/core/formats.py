@@ -40,7 +40,20 @@ __all__ = [
     "csr_to_dense",
     "bcsr_to_dense",
     "sell_to_dense",
+    "nnz_row_ids",
 ]
+
+
+def nnz_row_ids(indptr: "Array", dtype=np.int32) -> "Array":
+    """Per-nonzero row ids from a CSR indptr (host numpy, O(nnz)).
+
+    The one shared derivation behind every prepare-time row-map hoist
+    (core.spmv.csr_prepare, partition's padded shard maps, SELL packing).
+    """
+    indptr = np.asarray(indptr)
+    return np.repeat(
+        np.arange(indptr.shape[0] - 1, dtype=dtype), np.diff(indptr)
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -92,11 +92,24 @@ def grid_2d(a: CSRMatrix, grid: tuple[int, int]) -> list[list[CSRMatrix]]:
     return out
 
 
+def _padded_row_map(indptr: np.ndarray, nnz: int, max_nnz: int,
+                    max_rows: int) -> np.ndarray:
+    """Per-nnz row ids, padded with ``max_rows`` (out of segment range, so
+    padding entries drop out of the segment sum) — hoisted at stack time so
+    no shard_map dispatch re-derives the map with a searchsorted over nnz."""
+    from .formats import nnz_row_ids
+
+    rows = np.full(max_nnz, max_rows, dtype=np.int32)
+    rows[:nnz] = nnz_row_ids(indptr)
+    return rows
+
+
 def stack_csr_shards(shards: list[CSRMatrix]) -> dict[str, np.ndarray]:
     """Pad shards to a common (rows, nnz) and stack for shard_map.
 
     Padding rows are empty; padding nnz entries point at column 0 with value
-    0.0 (harmless under gather+FMA, same trick as SELL padding).
+    0.0 (harmless under gather+FMA, same trick as SELL padding).  ``rows``
+    is the prepared per-nnz row map consumed by ``distributed.local_spmm``.
     """
     max_rows = max(s.shape[0] for s in shards)
     max_nnz = max(s.nnz for s in shards)
@@ -104,6 +117,7 @@ def stack_csr_shards(shards: list[CSRMatrix]) -> dict[str, np.ndarray]:
     indptr = np.zeros((P, max_rows + 1), dtype=shards[0].indptr.dtype)
     indices = np.zeros((P, max_nnz), dtype=shards[0].indices.dtype)
     data = np.zeros((P, max_nnz), dtype=shards[0].data.dtype)
+    rows = np.zeros((P, max_nnz), dtype=np.int32)
     n_rows = np.zeros((P,), dtype=np.int32)
     for p, s in enumerate(shards):
         r = s.shape[0]
@@ -111,8 +125,10 @@ def stack_csr_shards(shards: list[CSRMatrix]) -> dict[str, np.ndarray]:
         indptr[p, r + 1 :] = s.indptr[-1]
         indices[p, : s.nnz] = s.indices
         data[p, : s.nnz] = s.data
+        rows[p] = _padded_row_map(s.indptr, s.nnz, max_nnz, max_rows)
         n_rows[p] = r
-    return {"indptr": indptr, "indices": indices, "data": data, "n_rows": n_rows}
+    return {"indptr": indptr, "indices": indices, "data": data, "rows": rows,
+            "n_rows": n_rows}
 
 
 def stack_grid_shards(grid: list[list[CSRMatrix]]) -> dict[str, np.ndarray]:
@@ -132,6 +148,7 @@ def stack_grid_shards(grid: list[list[CSRMatrix]]) -> dict[str, np.ndarray]:
     indptr = np.zeros((R, C, max_rows + 1), dtype=proto.indptr.dtype)
     indices = np.zeros((R, C, max_nnz), dtype=proto.indices.dtype)
     data = np.zeros((R, C, max_nnz), dtype=proto.data.dtype)
+    rows = np.zeros((R, C, max_nnz), dtype=np.int32)
     n_rows = np.zeros((R,), dtype=np.int32)
     for i, row in enumerate(grid):
         n_rows[i] = row[0].shape[0]
@@ -141,4 +158,7 @@ def stack_grid_shards(grid: list[list[CSRMatrix]]) -> dict[str, np.ndarray]:
             indptr[i, j, r + 1 :] = cell.indptr[-1]
             indices[i, j, : cell.nnz] = cell.indices
             data[i, j, : cell.nnz] = cell.data
-    return {"indptr": indptr, "indices": indices, "data": data, "n_rows": n_rows}
+            rows[i, j] = _padded_row_map(cell.indptr, cell.nnz, max_nnz,
+                                         max_rows)
+    return {"indptr": indptr, "indices": indices, "data": data, "rows": rows,
+            "n_rows": n_rows}

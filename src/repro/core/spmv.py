@@ -1,14 +1,22 @@
 """SpMV / SpMM reference implementations and the format-dispatch layer.
 
-Three algorithm tiers mirror the paper's compiler study (Fig 4):
+Four algorithm tiers mirror the paper's compiler study (Fig 4) plus its two
+decisive levers — latency hiding and load balance:
 
 * ``spmv_csr_scalar``  — the "-O1" analogue: one nonzero at a time via a
   sequential row loop (lax.fori_loop); useful only as the unvectorized
   baseline in benchmarks.
 * ``spmv_csr``/``spmm_csr`` — the "-O3" analogue: fully vectorized
-  gather + segment-sum, XLA-compiled.
+  gather + segment-sum, XLA-compiled.  The per-nnz row map is hoisted to
+  prepare time (:func:`csr_prepare`) so no dispatch pays a searchsorted
+  over nnz; raw ``CSRMatrix.device()`` dicts still work via a derive-on-
+  the-fly compat shim.
+* kernels/merge_spmv — the nnz-balanced merge tier: equal-nnz work chunks
+  with a carry/fixup scan, immune to power-law row skew (the paper's
+  ``dynamic,64`` load balancing recast for statically-shaped XLA).
 * Pallas kernels (kernels/sell_spmv, kernels/bcsr_spmm) — the hand-tiled
-  vgatherd/register-blocking adaptations; this module only dispatches.
+  vgatherd/register-blocking adaptations, their operand streams
+  double-buffered through kernels/pipeline; this module only dispatches.
 
 All functions take the ``device()`` pytrees of core.formats containers plus
 static shape info, so they jit cleanly.
@@ -20,8 +28,10 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
+    "csr_prepare",
     "spmv_csr",
     "spmm_csr",
     "spmv_csr_scalar",
@@ -36,24 +46,49 @@ __all__ = [
 # ---------------------------------------------------------------------------
 # CSR — vectorized gather + segment-sum ("-O3" tier)
 # ---------------------------------------------------------------------------
+def csr_prepare(a) -> dict[str, Any]:
+    """Device CSR dict with the per-nnz row map hoisted to prepare time.
+
+    ``rows[t]`` is the row of nonzero ``t`` — the quantity every dispatch
+    used to re-derive with a searchsorted over nnz.  Computing it here (one
+    O(nnz) numpy repeat per matrix) removes that work from the hot path;
+    the dispatch functions below accept both this dict and a raw
+    ``CSRMatrix.device()`` dict (compat shim derives rows on the fly).
+    """
+    from .formats import nnz_row_ids
+
+    dev = a.device()
+    dev["rows"] = jnp.asarray(nnz_row_ids(a.indptr))
+    return dev
+
+
+def _row_map(csr: dict[str, Any], n_rows: int) -> jax.Array:
+    """Prepared row map if present, else the legacy per-dispatch derivation."""
+    if "rows" in csr:
+        return csr["rows"]
+    return _rows_from_indptr(csr["indptr"], csr["indices"].shape[0], n_rows)
+
+
 @functools.partial(jax.jit, static_argnames=("n_rows",))
 def spmv_csr(csr: dict[str, Any], x: jax.Array, *, n_rows: int) -> jax.Array:
     """y = A @ x with A in CSR. 2 flops/nnz, gather on x (vgatherd analogue)."""
-    rows = _rows_from_indptr(csr["indptr"], csr["indices"].shape[0], n_rows)
     prod = csr["data"] * x[csr["indices"]]
-    return jax.ops.segment_sum(prod, rows, num_segments=n_rows)
+    return jax.ops.segment_sum(prod, _row_map(csr, n_rows), num_segments=n_rows)
 
 
 @functools.partial(jax.jit, static_argnames=("n_rows",))
 def spmm_csr(csr: dict[str, Any], x: jax.Array, *, n_rows: int) -> jax.Array:
     """Y = A @ X, X (n, k) — the paper's §5 SpMM with k simultaneous vectors."""
-    rows = _rows_from_indptr(csr["indptr"], csr["indices"].shape[0], n_rows)
     prod = csr["data"][:, None] * x[csr["indices"], :]
-    return jax.ops.segment_sum(prod, rows, num_segments=n_rows)
+    return jax.ops.segment_sum(prod, _row_map(csr, n_rows), num_segments=n_rows)
 
 
 def _rows_from_indptr(indptr: jax.Array, nnz: int, n_rows: int) -> jax.Array:
-    """Expand indptr -> per-nnz row ids without host round-trip."""
+    """Expand indptr -> per-nnz row ids without host round-trip.
+
+    Compat shim for raw-dict callers only: prepared dicts carry ``rows``
+    (see :func:`csr_prepare`) and never hit this searchsorted.
+    """
     # row[t] = number of indptr entries (excluding leading 0) <= t
     ids = jnp.arange(nnz, dtype=indptr.dtype)
     return jnp.searchsorted(indptr[1:], ids, side="right").astype(jnp.int32)
@@ -71,7 +106,7 @@ def spmv_csr_scalar(csr: dict[str, Any], x: jax.Array, *, n_rows: int) -> jax.Ar
     indices, data = csr["indices"], csr["data"]
     if indices.shape[0] == 0:  # empty matrix: nothing to accumulate
         return jnp.zeros(n_rows, x.dtype)
-    rows = _rows_from_indptr(csr["indptr"], indices.shape[0], n_rows)
+    rows = _row_map(csr, n_rows)
 
     def body(t, y):
         return y.at[rows[t]].add(data[t] * x[indices[t]])
@@ -150,8 +185,12 @@ def spmv(fmt: str, mat: dict[str, Any], x: jax.Array, *, n_rows: int, impl: str 
         if impl == "pallas":
             from repro.kernels import ops as kops
 
-            return kops.sell_spmv(mat, x, n_rows=n_rows)
+            return kops.sell_spmv(mat, x)
         return spmv_sell(mat, x, n_rows=n_rows)
+    if fmt == "merge":
+        from repro.kernels.merge_spmv import merge_spmv
+
+        return merge_spmv(mat, x)
     raise ValueError(f"unknown format for spmv: {fmt}")
 
 
@@ -160,10 +199,14 @@ def spmm(fmt: str, mat: dict[str, Any], x: jax.Array, *, n_rows: int, impl: str 
         return spmm_csr(mat, x, n_rows=n_rows)
     if fmt == "sell":
         return spmm_sell(mat, x, n_rows=n_rows)
+    if fmt == "merge":
+        from repro.kernels.merge_spmv import merge_spmm
+
+        return merge_spmm(mat, x)
     if fmt == "bcsr":
         if impl == "pallas":
             from repro.kernels import ops as kops
 
-            return kops.bcsr_spmm(mat, x, n_block_rows=n_rows)
+            return kops.bcsr_spmm(mat, x)
         return spmm_bcsr_dense(mat, x, n_block_rows=n_rows)
     raise ValueError(f"unknown format for spmm: {fmt}")

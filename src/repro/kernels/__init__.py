@@ -1,9 +1,12 @@
 """Pallas TPU kernels for the paper's compute hot spots.
 
-bcsr_spmm -- register blocking (Table 2) adapted to MXU tiles.
-sell_spmv -- vgatherd-style gather SpMV (Fig 4/5) adapted to SELL-C-sigma.
-ops       -- jit'd public wrappers;  ref -- pure-jnp oracles.
+pipeline   -- shared double-buffered slab pipeline (latency hiding core).
+bcsr_spmm  -- register blocking (Table 2) adapted to MXU tiles.
+sell_spmv  -- vgatherd-style gather SpMV (Fig 4/5) adapted to SELL-C-sigma.
+merge_spmv -- nnz-balanced merge-style segmented-scan SpMV/SpMM.
+ops        -- jit'd public wrappers;  ref -- pure-jnp oracles.
 """
-from . import ops, ref  # noqa: F401
+from . import merge_spmv, ops, ref  # noqa: F401
 from .bcsr_spmm import bcsr_spmm_pallas  # noqa: F401
-from .sell_spmv import sell_spmv_pallas  # noqa: F401
+from .pipeline import slab_pipeline  # noqa: F401
+from .sell_spmv import sell_spmv_blocked_pallas, sell_spmv_pallas  # noqa: F401

@@ -3,26 +3,32 @@
 The TPU adaptation of the paper's register blocking (§4.5, Table 2).  On the
 Phi a "register block" is an 8x{1..8} dense patch streamed through FMA
 registers; on TPU the natural patch is one MXU pass — a (bm, bk) = (128, 128)
-(or (8, 128) VPU) tile.  The stored-block stream maps onto the Pallas grid:
+(or (8, 128) VPU) tile.
 
-  grid = (n_tiles_N, n_blocks)            # inner dim walks stored blocks
-  A blocks   : (1, bm, bk) tile k         # linear stream, double-buffered DMA
-  X          : (bk, bn)    tile (cols[k], j)  # gathered by *scalar prefetch*
-  Y          : (bm, bn)    tile (rows[k], j)  # revisited while row constant
+The stored-block stream is the memory-latency hot spot, so it runs through
+the shared :mod:`repro.kernels.pipeline` slab pipeline: ``block_tile`` blocks
+per slab arrive in VMEM via double-buffered async copies that overlap the
+MXU work on the previous slab (the paper's software prefetching).  The
+N dimension stays on the Pallas grid ("parallel"); per grid step:
 
-Scalar-prefetched ``block_rows``/``block_cols`` drive the index maps — this
-is the vgatherd of the TPU version: the irregular gather is resolved at DMA
-descriptor time, not in the compute inner loop.  Because blocks are sorted by
-row, output revisits are consecutive and the accumulator stays resident in
-VMEM; it is written back exactly once per (row, j) — the analogue of the
-paper's NRNGO streaming stores (the output is never read from HBM).
+  A blocks  : ANY (HBM), slab (BT, bm, bk)     # double-buffered DMA stream
+  X strip   : (n_col_blocks * bk, bn) VMEM     # resident column strip
+  Y strip   : (n_block_rows * bm, bn) VMEM     # accumulator, written once
+
+``block_rows``/``block_cols`` ride in scalar-prefetch SMEM and resolve the
+irregular gather at *addressing* time — the block's x tile is a dynamic VMEM
+slice, the vgatherd of the TPU version.  Because blocks are sorted by row,
+the Y revisits are consecutive and stay VMEM-local; Y is written back exactly
+once (the analogue of the paper's NRNGO streaming stores).
+
+The strip residency implies (n_block_rows*bm + n_col_blocks*bk) * bn *
+itemsize bytes must fit the VMEM budget — ops.bcsr_spmm clamps ``n_tile``
+(= bn) by halving until it does (callers invoking this kernel directly own
+that budget themselves).
 
 The paper's Table 2 economics carry over verbatim: stored zeros cost
 bandwidth, so the ops layer exposes ``fill_ratio`` and benchmarks sweep block
 shapes exactly like Table 2.
-
-Grid dim 0 (N tiles) is "parallel"; dim 1 (the block stream) is "arbitrary"
-(sequential) because of the accumulation dependency.
 """
 from __future__ import annotations
 
@@ -35,30 +41,17 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.compat import CompilerParams as _CompilerParams
 
+from .pipeline import resolve_pipelined, slab_pipeline
+
 __all__ = ["bcsr_spmm_pallas"]
-
-
-def _kernel(block_rows, block_cols, a_ref, x_ref, o_ref):
-    del block_cols  # used only by the index maps
-    k = pl.program_id(1)
-    # First visit of this output row? (k==0 or the row id changed.)
-    prev = block_rows[jnp.maximum(k - 1, 0)]
-    is_first = jnp.logical_or(k == 0, block_rows[k] != prev)
-
-    @pl.when(is_first)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    o_ref[...] += jnp.dot(
-        a_ref[0],
-        x_ref[...],
-        preferred_element_type=o_ref.dtype,
-    )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_block_rows", "n_tile", "interpret", "out_dtype"),
+    static_argnames=(
+        "n_block_rows", "n_tile", "block_tile", "interpret", "out_dtype",
+        "pipelined",
+    ),
 )
 def bcsr_spmm_pallas(
     block_rows: jax.Array,  # (n_blocks,) int32, sorted
@@ -68,13 +61,19 @@ def bcsr_spmm_pallas(
     *,
     n_block_rows: int,
     n_tile: int = 128,
+    block_tile: int = 8,
     interpret: bool = False,
     out_dtype=jnp.float32,
+    pipelined: bool | None = None,
 ) -> jax.Array:
     """Returns (n_block_rows, bm, k) = A @ X with A block-sparse.
 
-    Requires every block row to own >= 1 stored block (ops.bcsr_prepare pads
-    empty rows with an explicit zero block, mirroring the paper's fill-in).
+    The block stream is padded (with explicit zero blocks at (row 0, col 0))
+    to a multiple of ``block_tile`` so the slab pipeline sees rectangular
+    slabs; zero blocks contribute nothing to row 0.  ``ops.bcsr_prepare``
+    additionally guarantees every block row owns >= 1 stored block
+    (paper-style fill-in), though the zero-initialized accumulator no longer
+    depends on it.
     """
     n_blocks, bm, bk = blocks.shape
     n_col_blocks, bk2, k = x_blocked.shape
@@ -82,8 +81,39 @@ def bcsr_spmm_pallas(
     assert k % n_tile == 0 or k < n_tile, (k, n_tile)
     bn = min(n_tile, k)
     x2d = x_blocked.reshape(n_col_blocks * bk, k)
+    pipe = resolve_pipelined(pipelined, interpret)
 
-    grid = (k // bn, n_blocks)
+    BT = int(block_tile)
+    pad = (-n_blocks) % BT
+    if pad:
+        block_rows = jnp.concatenate(
+            [block_rows, jnp.zeros((pad,), block_rows.dtype)]
+        )
+        block_cols = jnp.concatenate(
+            [block_cols, jnp.zeros((pad,), block_cols.dtype)]
+        )
+        blocks = jnp.concatenate(
+            [blocks, jnp.zeros((pad, bm, bk), blocks.dtype)]
+        )
+    n_slabs = (n_blocks + pad) // BT
+
+    def _kernel(rows_smem, cols_smem, blocks_hbm, x_ref, o_ref):
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+        def slab(s, ablocks):  # (BT, bm, bk) slab of the block stream
+            def one(t, _):
+                g = s * BT + t
+                xs = x_ref[pl.ds(cols_smem[g] * bk, bk), :]
+                o_ref[pl.ds(rows_smem[g] * bm, bm), :] += jnp.dot(
+                    ablocks[t], xs, preferred_element_type=o_ref.dtype
+                )
+                return 0
+
+            jax.lax.fori_loop(0, BT, one, 0)
+
+        slab_pipeline(slab, [(blocks_hbm, BT)], n_slabs, pipelined=pipe)
+
+    grid = (k // bn,)
 
     out = pl.pallas_call(
         _kernel,
@@ -91,20 +121,18 @@ def bcsr_spmm_pallas(
             num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),  # block stream (DMA)
                 pl.BlockSpec(
-                    (1, bm, bk), lambda j, t, rows, cols: (t, 0, 0)
-                ),
-                pl.BlockSpec(
-                    (bk, bn), lambda j, t, rows, cols: (cols[t], j)
+                    (n_col_blocks * bk, bn), lambda j, rows, cols: (0, j)
                 ),
             ],
             out_specs=pl.BlockSpec(
-                (bm, bn), lambda j, t, rows, cols: (rows[t], j)
+                (n_block_rows * bm, bn), lambda j, rows, cols: (0, j)
             ),
         ),
         out_shape=jax.ShapeDtypeStruct((n_block_rows * bm, k), out_dtype),
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "arbitrary"),
+            dimension_semantics=("parallel",),
         ),
         interpret=interpret,
     )(block_rows, block_cols, blocks, x2d)

@@ -1,0 +1,109 @@
+"""Merge-style nnz-balanced SpMV/SpMM: the load-balance tier.
+
+The paper's load-balancing lever is OpenMP ``dynamic,64`` row scheduling —
+cheap on a cache-coherent Phi, unavailable to a statically-shaped XLA/TPU
+program.  Every row-parallel tier here (CSR segment-sum, SELL's padded
+chunks) therefore pays for row-length skew: SELL pads every chunk to its
+longest row (power-law rows inflate stored slots by orders of magnitude) and
+the CSR gather funnels all nonzeros through one serialized scatter-add.
+Merge-based SpMV (Merrill & Garland's merge-path applied to CSR) fixes the
+balance *in the decomposition*: split the nonzero stream — not the rows —
+into equal work chunks, reduce each chunk independently, and fix up the rows
+that straddle chunk boundaries with a carry pass.
+
+This module is that algorithm in its segmented-scan form, which XLA compiles
+to dense, perfectly balanced vector code with NO data-dependent scatter:
+
+* prepare (host, once): pad nnz to ``n_chunks * chunk``; hoist the row
+  boundary pointers (``indptr`` start/end per row) — the chunk table.
+* phase 1 (chunk-local): products ``A.data * x[cols]`` reshaped
+  (n_chunks, chunk); an *intra-chunk* inclusive scan.
+* phase 2 (carry/fixup): an exclusive scan over the per-chunk totals adds
+  each chunk's carry-in, merging partial rows that straddle chunk
+  boundaries into one global prefix-sum table P.
+* gather: row r's sum is ``P[end[r]] - P[start[r]]`` — O(1) per row
+  whatever its length, so a 4700-nonzero webbase row costs exactly what an
+  empty row costs.  Empty rows (start == end) fall out as exact zeros.
+
+Cost is O(nnz) scan + O(m) gathers, independent of the row distribution —
+the tier the tuner reaches for when ``nnz_row_cv`` says SELL padding and
+row-parallel CSR will burn (see tune.candidates' imbalance cost term).
+
+Precision caveat: a row's sum is a *difference of global prefix sums*, so
+its absolute error scales with eps * |P[end]| — for matrices whose products
+are systematically same-signed, |P| grows ~linearly in nnz and late rows
+with small true sums lose relative precision vs the per-row CSR reduction
+(the chunked scan shortens the sequential carry chain but not the magnitude
+of the prefix).  Zero-mean data (this suite, and most FEM/graph weights) is
+unaffected: |P| stays O(sqrt(nnz)).  For same-signed data at large nnz,
+prefer the CSR/SELL tiers or widen the accumulator dtype upstream.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["merge_prepare", "merge_spmv", "merge_spmm", "DEFAULT_CHUNK"]
+
+DEFAULT_CHUNK = 4096  # equal-nnz work chunk (the merge-path grain)
+
+
+def merge_prepare(a, chunk: int = DEFAULT_CHUNK) -> dict[str, Any]:
+    """Host-side chunk table: padded nnz streams + hoisted row pointers.
+
+    The returned dict is a jit-stable pytree: ``indices``/``data`` are padded
+    to ``n_chunks * chunk`` (padding gathers x[0] with value 0.0 — harmless),
+    ``start``/``end`` are the per-row prefix-sum gather offsets.  ``chunk``
+    and ``n_chunks`` ride along as static python ints.
+    """
+    chunk = max(1, int(chunk))
+    nnz = a.nnz
+    n_chunks = max(1, -(-nnz // chunk))
+    pad = n_chunks * chunk - nnz
+    indices = np.concatenate([a.indices, np.zeros(pad, a.indices.dtype)])
+    data = np.concatenate([a.data, np.zeros(pad, a.data.dtype)])
+    return {
+        "indices": jnp.asarray(indices),
+        "data": jnp.asarray(data),
+        "start": jnp.asarray(a.indptr[:-1].astype(np.int32)),
+        "end": jnp.asarray(a.indptr[1:].astype(np.int32)),
+        "chunk": chunk,
+        "n_chunks": n_chunks,
+        "shape": a.shape,
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "n_chunks"))
+def _prefix_table(data, indices, x2, *, chunk, n_chunks):
+    """P (1 + n_chunks*chunk, k): global prefix sums of A.data * x[cols].
+
+    Phase 1 scans within chunks, phase 2 folds the carry of chunk totals in
+    — the merge of boundary-straddling partial rows.
+    """
+    prod = data[:, None] * x2[indices, :]  # (nnz_pad, k)
+    k = prod.shape[-1]
+    pc = prod.reshape(n_chunks, chunk, k)
+    local = jnp.cumsum(pc, axis=1)  # intra-chunk scan
+    carry = jnp.concatenate(
+        [jnp.zeros((1, k), prod.dtype), jnp.cumsum(local[:, -1, :], axis=0)[:-1]]
+    )  # exclusive scan of chunk totals: the carry/fixup pass
+    P = (local + carry[:, None, :]).reshape(n_chunks * chunk, k)
+    return jnp.concatenate([jnp.zeros((1, k), prod.dtype), P], axis=0)
+
+
+def merge_spmm(prep: dict[str, Any], x: jax.Array) -> jax.Array:
+    """Y = A @ X, X (n, k): nnz-balanced segmented reduction."""
+    P = _prefix_table(
+        prep["data"], prep["indices"], x,
+        chunk=prep["chunk"], n_chunks=prep["n_chunks"],
+    )
+    return P[prep["end"], :] - P[prep["start"], :]
+
+
+def merge_spmv(prep: dict[str, Any], x: jax.Array) -> jax.Array:
+    """y = A @ x: the k=1 column of :func:`merge_spmm`."""
+    return merge_spmm(prep, x[:, None])[:, 0]

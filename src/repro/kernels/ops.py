@@ -4,7 +4,8 @@ Handles everything the raw kernels don't: empty-block-row padding, x column
 slabbing (cache blocking) for matrices whose x does not fit in VMEM, output
 un-permutation for SELL, and interpret-mode selection (interpret=True on CPU
 — the kernels' TPU lowering is exercised in the dry-run, their numerics
-here).
+here).  The kernels themselves stream their A (and x-slab) operands through
+the shared double-buffered slab pipeline (kernels/pipeline.py).
 """
 from __future__ import annotations
 
@@ -16,8 +17,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.formats import BCSRMatrix, SELLMatrix
+from repro.core.formats import nnz_row_ids as formats_nnz_row_ids
 from .bcsr_spmm import bcsr_spmm_pallas
-from .sell_spmv import sell_spmv_pallas
+from .sell_spmv import sell_spmv_blocked_pallas, sell_spmv_pallas
 
 __all__ = [
     "on_cpu",
@@ -25,6 +27,10 @@ __all__ = [
     "bcsr_spmm",
     "sell_prepare",
     "sell_spmv",
+    "sell_prepare_blocked",
+    "sell_prepare_blocked_stacked",
+    "sell_spmv_blocked",
+    "sell_spmv_blocked_stacked",
     "VMEM_BUDGET_BYTES",
 ]
 
@@ -75,13 +81,29 @@ def bcsr_spmm(
     n_tile: int = 128,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Y = A @ X. x: (n, k) unblocked; returns (m, k) unpadded."""
+    """Y = A @ X. x: (n, k) unblocked; returns (m, k) unpadded.
+
+    The pipelined kernel keeps a (gm*bm, bn) Y strip and a (gn*bk, bn) X
+    strip VMEM-resident per grid step, so ``bn`` is clamped (by halving,
+    which preserves k-divisibility) until both strips fit the VMEM budget.
+    A matrix so tall that even bn=1 exceeds the budget (> ~4M padded rows)
+    runs over budget rather than failing here — the cost model already
+    prices such shapes out of the pallas tier.
+    """
     if interpret is None:
         interpret = on_cpu()
     gm, gn = prep["grid_shape"]
     bm, bk = prep["block_shape"]
     m, n = prep["shape"]
     k = x.shape[-1]
+    bn = min(n_tile, k)
+    strip_rows = gm * bm + gn * bk
+    while (
+        bn > 1
+        and strip_rows * bn * x.dtype.itemsize > VMEM_BUDGET_BYTES
+        and k % (bn // 2) == 0
+    ):
+        bn //= 2
     x_pad = jnp.zeros((gn * bk, k), x.dtype).at[:n].set(x)
     out = bcsr_spmm_pallas(
         prep["block_rows"],
@@ -89,7 +111,7 @@ def bcsr_spmm(
         prep["blocks"],
         x_pad.reshape(gn, bk, k),
         n_block_rows=gm,
-        n_tile=n_tile,
+        n_tile=bn,
         interpret=interpret,
     )
     return out.reshape(gm * bm, k)[:m]
@@ -166,7 +188,7 @@ def sell_prepare_blocked(a, n_slabs: int, chunk_tile: int = 8,
 
     m, n = a.shape
     bounds = np.linspace(0, n, n_slabs + 1).astype(np.int64)
-    rows_of_nnz = np.repeat(np.arange(m, dtype=np.int64), np.diff(a.indptr))
+    rows_of_nnz = formats_nnz_row_ids(a.indptr, dtype=np.int64)
     slab_of_nnz = np.searchsorted(bounds[1:], a.indices, side="right")
     slabs = []
     for s in range(n_slabs):
@@ -220,10 +242,114 @@ def _sell_prepare_blocked_loop(a, n_slabs: int, chunk_tile: int = 8,
 
 def sell_spmv_blocked(prep: dict[str, Any], x: jax.Array,
                       *, interpret: bool | None = None) -> jax.Array:
-    """y = A @ x with column-slab accumulation (each slab's x fits VMEM)."""
+    """y = A @ x with column-slab accumulation (each slab's x fits VMEM).
+
+    One kernel launch per slab; kept as the reference for the fused
+    single-launch :func:`sell_spmv_blocked_stacked` path below.
+    """
     m, _ = prep["shape"]
     y = jnp.zeros((m,), x.dtype)
     for s, slab in enumerate(prep["slabs"]):
         lo, hi = int(prep["bounds"][s]), int(prep["bounds"][s + 1])
         y = y + sell_spmv(slab, x[lo:hi], interpret=interpret)
     return y
+
+
+# ---------------------------------------------------------------------------
+# Stacked column-slab SELL: one launch, x slabs streamed through the pipeline
+# ---------------------------------------------------------------------------
+def sell_prepare_blocked_stacked(a, n_slabs: int, C: int = 8,
+                                 sigma: int = 64) -> dict[str, Any]:
+    """Pack A into ``n_slabs`` column slabs sharing ONE row permutation.
+
+    Unlike :func:`sell_prepare_blocked` (independent SELL per slab, python
+    loop of kernel launches), every slab here is packed over the same
+    window-of-``sigma`` row sort, so the per-slab partial sums align
+    positionally: the kernel accumulates them in sorted order across slabs
+    and the caller un-permutes once.  All slabs share one padded width W
+    (max nonzeros of any (row, slab) cell, lane-aligned), making the device
+    arrays rectangular: cols/vals (n_slabs, n_chunks, C, W).
+
+    Slab widths are uniform (``slab_n = ceil(n / n_slabs)``; x is zero-padded
+    to ``n_slabs * slab_n``) so the kernel's x-slab stream is a plain
+    leading-dim slicing — the slab pipeline double-buffers it like any other
+    operand.
+    """
+    m, n = a.shape
+    slab_n = max(1, -(-n // n_slabs))
+    lengths = np.diff(a.indptr).astype(np.int64)
+    # Shared row permutation: the same window-sigma descending-length sort as
+    # formats.sell_from_csr, computed once on whole-row lengths.
+    perm = np.arange(m)
+    for s in range(0, m, sigma):
+        e = min(s + sigma, m)
+        window = perm[s:e]
+        perm[s:e] = window[np.argsort(-lengths[window], kind="stable")]
+    inv_perm = np.empty(m, dtype=np.int64)
+    inv_perm[perm] = np.arange(m)
+    n_chunks = max(1, -(-m // C))
+
+    rows_of_nnz = formats_nnz_row_ids(a.indptr, dtype=np.int64)
+    slab_of_nnz = a.indices.astype(np.int64) // slab_n
+    # Within a row, columns ascend, so each (row, slab) group is a contiguous
+    # run; the slot of a nonzero is its rank inside that run.
+    key = rows_of_nnz * n_slabs + slab_of_nnz
+    counts = np.bincount(key, minlength=m * n_slabs) if a.nnz else np.zeros(1)
+    W = int(max(counts.max(initial=0), 1))
+    W = -(-W // 8) * 8  # lane alignment, as in sell_from_csr(width_align=8)
+    run_start = np.zeros(a.nnz, dtype=np.int64)
+    if a.nnz:
+        new_run = np.flatnonzero(np.diff(key) != 0) + 1
+        starts = np.concatenate([[0], new_run])
+        run_id = np.zeros(a.nnz, dtype=np.int64)
+        run_id[new_run] = 1
+        run_id = np.cumsum(run_id)
+        run_start = starts[run_id]
+    slot = np.arange(a.nnz, dtype=np.int64) - run_start
+
+    sorted_row = inv_perm[rows_of_nnz]
+    cols = np.zeros((n_slabs, n_chunks, C, W), dtype=np.int32)
+    vals = np.zeros((n_slabs, n_chunks, C, W), dtype=a.data.dtype)
+    cols[slab_of_nnz, sorted_row // C, sorted_row % C, slot] = (
+        a.indices.astype(np.int64) - slab_of_nnz * slab_n
+    )
+    vals[slab_of_nnz, sorted_row // C, sorted_row % C, slot] = a.data
+    row_perm = np.full(n_chunks * C, -1, dtype=np.int32)
+    row_perm[:m] = perm
+    return {
+        "cols": jnp.asarray(cols),
+        "vals": jnp.asarray(vals),
+        "row_perm": jnp.asarray(row_perm),
+        "slab_n": slab_n,
+        "shape": a.shape,
+    }
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_rows", "slab_n", "interpret")
+)
+def _sell_blocked_stacked_jit(cols, vals, row_perm, x, *, n_rows, slab_n,
+                              interpret):
+    n_slabs = cols.shape[0]
+    x_pad = jnp.zeros((n_slabs * slab_n,), x.dtype).at[: x.shape[0]].set(x)
+    sums = sell_spmv_blocked_pallas(
+        cols, vals, x_pad, slab_n=slab_n, interpret=interpret
+    )
+    valid = row_perm >= 0
+    y = jnp.zeros((n_rows,), x.dtype)
+    return y.at[jnp.where(valid, row_perm, 0)].add(
+        jnp.where(valid, sums, 0.0)
+    )
+
+
+def sell_spmv_blocked_stacked(
+    prep: dict[str, Any], x: jax.Array, *, interpret: bool | None = None
+) -> jax.Array:
+    """y = A @ x through the single-launch stacked column-slab kernel."""
+    if interpret is None:
+        interpret = on_cpu()
+    m, _ = prep["shape"]
+    return _sell_blocked_stacked_jit(
+        prep["cols"], prep["vals"], prep["row_perm"], x,
+        n_rows=m, slab_n=int(prep["slab_n"]), interpret=interpret,
+    )

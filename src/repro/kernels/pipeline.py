@@ -1,0 +1,124 @@
+"""Double-buffered slab pipelines: the latency-hiding core shared by kernels.
+
+The paper's headline finding is that SpMV on the Phi is bound by *memory
+latency*, not bandwidth — its wins come from software prefetching and enough
+threads in flight to hide the ~hundreds-of-cycles HBM round trip (§4.3, and
+Fang et al.'s empirical study confirms pipelining/prefetch as the decisive
+lever).  The TPU analogue is explicit DMA overlap: while the VPU/MXU chews on
+slab ``i``, the DMA engines are already filling the other buffer with slab
+``i+1``.
+
+:func:`slab_pipeline` is that pattern packaged for use *inside* a Pallas
+kernel.  Each operand stream is declared as ``(ref, slab_rows)`` — the ref
+lives in ``pltpu.ANY`` (compiler-chosen, HBM for large arrays) and is
+consumed ``slab_rows`` leading-dim rows at a time.  The helper allocates a
+(2, slab_rows, ...) VMEM scratch plus a DMA semaphore pair per stream and
+runs the canonical warm-up / start-next / wait-current / compute loop, so A
+(and x-slab) traffic overlaps compute instead of serializing ahead of it.
+
+Two execution paths, one numerics definition:
+
+* ``pipelined=True`` — manual ``pltpu.make_async_copy`` double buffering
+  (works under interpret mode too; CI exercises it for equivalence).
+* ``pipelined=False`` — the interpret-mode fallback: the same slab loop with
+  direct synchronous loads, no scratch, no semaphores.  This is the default
+  under ``interpret=True`` so the kernels stay debuggable on backends whose
+  interpreter lacks DMA semantics.
+
+The compute callback receives loaded slab *arrays* (not refs) in both paths,
+so a kernel ported onto the helper cannot diverge between them.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["slab_pipeline", "resolve_pipelined"]
+
+N_BUFFERS = 2  # double buffering: one slab in compute, one in flight
+
+
+def resolve_pipelined(pipelined: bool | None, interpret: bool) -> bool:
+    """Default policy: DMA pipeline when compiled, direct loads in interpret.
+
+    Callers may force ``pipelined=True`` under interpret (the jax TPU
+    interpreter models DMA semaphores) — the equivalence tests do exactly
+    that — but the safe default keeps interpret runs on the plain-load path.
+    """
+    return (not interpret) if pipelined is None else bool(pipelined)
+
+
+def slab_pipeline(
+    body: Callable[..., None],
+    streams: Sequence[tuple],
+    n_slabs: int,
+    *,
+    pipelined: bool = True,
+) -> None:
+    """Run ``body(s, *slabs)`` for ``s`` in ``[0, n_slabs)`` with slab ``s``
+    of every stream resident in VMEM, double-buffering the copies.
+
+    streams: ``(ref, slab_rows)`` pairs; slab ``s`` of a stream is
+    ``ref[s*slab_rows : (s+1)*slab_rows, ...]`` (leading-dim slicing, so a
+    per-slab-stacked operand uses ``slab_rows=1`` and indexes axis 0).  The
+    leading dim of every ref must be exactly ``n_slabs * slab_rows`` — pad at
+    prepare time, never in the kernel.
+
+    ``body`` must only *accumulate* into output refs (or write disjoint
+    slices per ``s``): it runs inside a sequential ``fori_loop``.
+    """
+    streams = [(ref, int(rows)) for ref, rows in streams]
+
+    if not pipelined:
+        def plain_step(s, _):
+            slabs = [ref[pl.ds(s * rows, rows)] for ref, rows in streams]
+            body(s, *slabs)
+            return 0
+
+        jax.lax.fori_loop(0, n_slabs, plain_step, 0)
+        return
+
+    def scoped(*alloc):
+        scratches = alloc[: len(streams)]
+        sems = alloc[len(streams):]
+
+        def dmas(s, slot):
+            return [
+                pltpu.make_async_copy(
+                    ref.at[pl.ds(s * rows, rows)],
+                    scratch.at[slot],
+                    sem.at[slot],
+                )
+                for (ref, rows), scratch, sem in zip(streams, scratches, sems)
+            ]
+
+        for d in dmas(0, 0):  # warm up: slab 0 into buffer 0
+            d.start()
+
+        def step(s, _):
+            slot = s % N_BUFFERS
+
+            @pl.when(s + 1 < n_slabs)
+            def _prefetch():  # next slab into the other buffer, overlapped
+                for d in dmas(s + 1, (s + 1) % N_BUFFERS):
+                    d.start()
+
+            for d in dmas(s, slot):
+                d.wait()
+            body(s, *(scratch[slot] for scratch in scratches))
+            return 0
+
+        jax.lax.fori_loop(0, n_slabs, step, 0)
+
+    pl.run_scoped(
+        scoped,
+        *[
+            pltpu.VMEM((N_BUFFERS, rows) + ref.shape[1:], ref.dtype)
+            for ref, rows in streams
+        ],
+        *[pltpu.SemaphoreType.DMA((N_BUFFERS,)) for _ in streams],
+    )

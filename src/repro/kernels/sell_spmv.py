@@ -8,16 +8,27 @@ TPUs have no HBM gather; arbitrary indexing is only cheap once both operands
 sit in VMEM.  So the packing is turned inside out: SELL-C-sigma sorts rows by
 length inside windows of ``sigma`` rows (the analogue of the paper's
 ``dynamic,64`` chunk scheduling) and packs C = 8 rows (one sublane tile) of
-up-to-W slots each.  The kernel tiles chunks along the grid, keeps the x
-vector (or an x column-slab for cache blocking, cf. Nishtala et al. in the
-paper's refs) resident in VMEM, and performs the gather VMEM-to-VREG:
+up-to-W slots each.  Both kernels here are built on the shared
+:mod:`repro.kernels.pipeline` slab pipeline, so the A streams (and, in the
+column-slab variant, the x slabs) arrive via double-buffered DMA that
+overlaps the VMEM gather+FMA of the previous slab — the paper's software
+prefetching, expressed as explicit async copies:
 
-  grid = (n_chunk_tiles,)
-  cols/vals : (T, C, W) tile i        # streamed, double-buffered
-  x         : (n,) whole vector       # resident (slabbed when too large)
-  y_sorted  : (T * C,) tile i         # written once (NRNGO analogue)
+:func:`sell_spmv_pallas` — x resident in VMEM, cols/vals streamed
+  (T, C, W) chunk tiles at a time:
 
-The UTD metric (core.metrics) predicts this kernel's win over the scalar
+    cols/vals : ANY (HBM), slab (T, C, W)   # double-buffered DMA
+    x         : (n,) VMEM                   # resident
+    y_sorted  : (n_chunks * C,) VMEM        # written once per tile (NRNGO)
+
+:func:`sell_spmv_blocked_pallas` — cache blocking for x beyond the VMEM
+  budget (Nishtala et al. in the paper's refs): A is pre-split into column
+  slabs, one SELL packing per slab over a *shared* row permutation, stacked
+  rectangular; the kernel pipelines (cols_s, vals_s, x_slab_s) triples and
+  accumulates sorted partials, so x traffic is slabbed through the same
+  double-buffered path as A instead of assumed resident.
+
+The UTD metric (core.metrics) predicts these kernels' win over the scalar
 tier exactly as UCLD predicts the vgatherd win in Fig 5.
 """
 from __future__ import annotations
@@ -31,19 +42,13 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.compat import CompilerParams as _CompilerParams
 
-__all__ = ["sell_spmv_pallas"]
+from .pipeline import resolve_pipelined, slab_pipeline
 
-
-def _kernel(cols_ref, vals_ref, x_ref, o_ref):
-    cols = cols_ref[...]  # (T, C, W) int32
-    vals = vals_ref[...]  # (T, C, W)
-    x = x_ref[...]  # (n,)
-    gathered = x[cols]  # VMEM gather — the vgatherd analogue
-    o_ref[...] = (vals * gathered).sum(axis=-1).reshape(o_ref.shape)
+__all__ = ["sell_spmv_pallas", "sell_spmv_blocked_pallas"]
 
 
 @functools.partial(
-    jax.jit, static_argnames=("chunk_tile", "interpret")
+    jax.jit, static_argnames=("chunk_tile", "interpret", "pipelined")
 )
 def sell_spmv_pallas(
     cols: jax.Array,  # (n_chunks, C, W) int32
@@ -52,25 +57,91 @@ def sell_spmv_pallas(
     *,
     chunk_tile: int = 8,
     interpret: bool = False,
+    pipelined: bool | None = None,
 ) -> jax.Array:
     """Returns per-sorted-row sums (n_chunks * C,); caller un-permutes."""
     n_chunks, C, W = cols.shape
     assert n_chunks % chunk_tile == 0, (n_chunks, chunk_tile)
     T = chunk_tile
-    grid = (n_chunks // T,)
+    n_tiles = n_chunks // T
+    pipe = resolve_pipelined(pipelined, interpret)
+
+    def _kernel(cols_hbm, vals_hbm, x_ref, o_ref):
+        xv = x_ref[...]  # resident; the gather below is VMEM-to-VREG
+
+        def tile(i, ct, vt):  # slab i of the A streams, (T, C, W)
+            o_ref[pl.ds(i * T * C, T * C)] = (
+                (vt * xv[ct]).sum(axis=-1).reshape(T * C)
+            )
+
+        slab_pipeline(
+            tile, [(cols_hbm, T), (vals_hbm, T)], n_tiles, pipelined=pipe
+        )
 
     return pl.pallas_call(
         _kernel,
-        grid=grid,
         in_specs=[
-            pl.BlockSpec((T, C, W), lambda i: (i, 0, 0)),
-            pl.BlockSpec((T, C, W), lambda i: (i, 0, 0)),
-            pl.BlockSpec(x.shape, lambda i: (0,)),  # resident
+            pl.BlockSpec(memory_space=pltpu.ANY),  # streamed by the pipeline
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(x.shape, lambda: (0,)),  # resident in VMEM
         ],
-        out_specs=pl.BlockSpec((T * C,), lambda i: (i,)),
+        out_specs=pl.BlockSpec((n_chunks * C,), lambda: (0,)),
         out_shape=jax.ShapeDtypeStruct((n_chunks * C,), vals.dtype),
-        compiler_params=_CompilerParams(
-            dimension_semantics=("arbitrary",),
-        ),
+        compiler_params=_CompilerParams(),
+        interpret=interpret,
+    )(cols, vals, x)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("slab_n", "interpret", "pipelined")
+)
+def sell_spmv_blocked_pallas(
+    cols: jax.Array,  # (n_slabs, n_chunks, C, W) int32, slab-local columns
+    vals: jax.Array,  # (n_slabs, n_chunks, C, W)
+    x: jax.Array,  # (n_slabs * slab_n,) zero-padded
+    *,
+    slab_n: int,
+    interpret: bool = False,
+    pipelined: bool | None = None,
+) -> jax.Array:
+    """Column-slab SELL SpMV: returns sorted partial sums (n_chunks * C,).
+
+    Every slab is packed over the SAME row permutation (see
+    ``ops.sell_prepare_blocked_stacked``), so slab partials accumulate
+    positionally and the caller un-permutes once.  Slab ``s`` consumes
+    ``x[s*slab_n:(s+1)*slab_n]`` — only one x slab (plus the one in flight)
+    occupies VMEM at any time, which is the whole point: x larger than the
+    VMEM budget streams through the pipeline instead of disqualifying the
+    kernel.
+    """
+    n_slabs, n_chunks, C, W = cols.shape
+    assert x.shape[0] == n_slabs * slab_n, (x.shape, n_slabs, slab_n)
+    pipe = resolve_pipelined(pipelined, interpret)
+
+    def _kernel(cols_hbm, vals_hbm, x_hbm, o_ref):
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+        def slab(s, ct, vt, xs):  # ct/vt (1, n_chunks, C, W), xs (slab_n,)
+            o_ref[...] += (vt[0] * xs[ct[0]]).sum(axis=-1).reshape(
+                n_chunks * C
+            )
+
+        slab_pipeline(
+            slab,
+            [(cols_hbm, 1), (vals_hbm, 1), (x_hbm, slab_n)],
+            n_slabs,
+            pipelined=pipe,
+        )
+
+    return pl.pallas_call(
+        _kernel,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # x slabs streamed too
+        ],
+        out_specs=pl.BlockSpec((n_chunks * C,), lambda: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_chunks * C,), vals.dtype),
+        compiler_params=_CompilerParams(),
         interpret=interpret,
     )(cols, vals, x)

@@ -11,10 +11,16 @@ Plans are held per *k-bucket* (default k in {1, 4, 16, 64}); a batch of b
 pending requests is rounded up to the smallest bucket >= b and padded with
 zero columns.  Occupancy therefore decides at runtime whether the k=1 SpMV
 plan (CSR-vector / SELL) or a wide SpMM plan (CSR gather / BCSR) runs — the
-serving analogue of the paper's Fig 9 crossover.  The bucket plan table
-comes from :meth:`repro.tune.SparseOperator.build_multi` and lives in the
-shared JSON plan cache, so a restarted engine reloads every bucket's plan
-without re-searching.
+serving analogue of the paper's Fig 9 crossover.  Because the bucket plans
+come from the measured search, skewed matrices (high nnz-row CV) land on
+the nnz-balanced merge tier automatically: the imbalance cost term steers
+the pruning and the timing settles it, per bucket — no engine-side format
+policy.  The bucket plan table comes from
+:meth:`repro.tune.SparseOperator.build_multi` and lives in the shared JSON
+plan cache, so a restarted engine reloads every bucket's plan without
+re-searching; buckets sharing a winning format also share ONE prepared-dict
+instance (preparation is memoized on the structure fingerprint + value
+digest — k never enters preparation).
 
 Row-partitioned mode (``n_shards > 1``) routes batches through
 ``core.distributed.stacked_spmm`` instead: the matrix is split by

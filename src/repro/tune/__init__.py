@@ -10,6 +10,7 @@ from .candidates import (
     BCSR_BLOCKS,
     Candidate,
     DEFAULT_PRUNE_FACTOR,
+    MERGE_CHUNKS,
     REORDER_METHODS,
     SELL_SIGMAS,
     SCHEDULES,
@@ -23,7 +24,7 @@ from .candidates import (
     split_reorder,
 )
 from .features import MatrixFeatures, extract
-from .operator import SparseOperator, prepare, runner
+from .operator import SparseOperator, prepare, prepare_cached, runner
 from .plan import PLAN_VERSION, Plan, PlanCache, default_cache, fingerprint
 from .timing import TIMED, WARMUP, time_fn
 
@@ -31,6 +32,7 @@ __all__ = [
     "BCSR_BLOCKS",
     "Candidate",
     "DEFAULT_PRUNE_FACTOR",
+    "MERGE_CHUNKS",
     "MatrixFeatures",
     "PLAN_VERSION",
     "Plan",
@@ -50,6 +52,7 @@ __all__ = [
     "fingerprint",
     "make",
     "prepare",
+    "prepare_cached",
     "prune",
     "runner",
     "sell_padded_slots",

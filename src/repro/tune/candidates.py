@@ -3,7 +3,10 @@
 A *candidate* is one (format, impl, params) point from the cross-product the
 paper sweeps by hand: CSR scalar/vector (Fig 4's -O1/-O3 tiers), SELL-C-sigma
 with sigma in {1, 64, 256} and resident vs column-slabbed x (Fig 5 / cache
-blocking), and BCSR with the Table 2 block shapes.
+blocking), BCSR with the Table 2 block shapes, and the nnz-balanced merge
+tier (kernels/merge_spmv) whose chunked-scan decomposition is immune to
+row-length skew — the search-space answer to the paper's ``dynamic,64``
+load balancing.
 
 Pruning happens *before* any format is materialized or timed, from a cost
 model in abstract byte units: the paper's §4.2 application-bytes model per
@@ -40,13 +43,16 @@ __all__ = [
     "DEFAULT_PRUNE_FACTOR",
     "SELL_SIGMAS",
     "BCSR_BLOCKS",
+    "MERGE_CHUNKS",
     "REORDER_METHODS",
+    "ROW_IMBALANCE_WEIGHT",
     "SCHEDULES",
     "RING_STEP_OVERHEAD_BYTES",
 ]
 
 SELL_SIGMAS = (1, 64, 256)
 BCSR_BLOCKS = ((8, 8), (8, 16), (8, 128))  # Table 2's TPU-tile adaptation
+MERGE_CHUNKS = (2048, 16384)  # equal-nnz grains for the merge tier
 DEFAULT_PRUNE_FACTOR = 3.0
 REORDER_METHODS = ("rcm",)  # paper §4.4; opt-in via enumerate(reorders=...)
 # SCHEDULES (re-exported above) is owned by core.distributed: the module
@@ -73,6 +79,17 @@ OVERHEAD_BYTES = 4 * 1024 * 1024
 # that the rotation bytes overlap the slab compute instead of serializing
 # ahead of it.
 RING_STEP_OVERHEAD_BYTES = 512 * 1024
+
+# Row-imbalance penalty for tiers whose parallel decomposition follows rows.
+# The paper's dynamic,64 scheduling absorbs skew on the Phi; a static
+# row-parallel XLA program cannot, so its effective throughput degrades with
+# the nnz/row dispersion (nnz_row_cv).  SELL pays its skew cost explicitly
+# through padded slots (already in its byte count) and the merge tier's
+# equal-nnz chunks pay nothing — only the CSR tiers carry this multiplier.
+# The CV is capped so one pathological row cannot zero out a whole tier
+# before measurement (pruning keeps near-ties; the measured search decides).
+ROW_IMBALANCE_WEIGHT = 0.5
+ROW_IMBALANCE_CV_CAP = 4.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +141,7 @@ def enumerate_candidates(
     sigmas: Iterable[int] = SELL_SIGMAS,
     bcsr_blocks: Iterable[tuple[int, int]] = BCSR_BLOCKS,
     chunk_tiles: Iterable[int] = (8, 16),
+    merge_chunks: Iterable[int] = MERGE_CHUNKS,
     include_scalar: bool = True,
     include_pallas: bool = True,
     reorders: Iterable[str] = (),
@@ -133,7 +151,11 @@ def enumerate_candidates(
     SELL and the scalar tier only exist for SpMV (kind="spmv"); SpMM
     (kind="spmm") contrasts CSR gather/segment-sum with the Table 2 BCSR
     shapes.  Column-slabbed SELL variants are enumerated only when the x
-    footprint exceeds the VMEM budget (features.x_fits_vmem).
+    footprint exceeds the VMEM budget (features.x_fits_vmem).  The merge
+    tier (nnz-balanced segmented scan, kernels/merge_spmv) enumerates for
+    both kinds — it is the only tier whose work decomposition ignores the
+    row distribution, so it is what the search falls back on when
+    ``nnz_row_cv`` is high.
 
     ``reorders`` (e.g. ``("rcm",)``) doubles the space with row/column
     permuted variants of every non-scalar candidate — the paper's §4.4
@@ -142,6 +164,7 @@ def enumerate_candidates(
     reordering cannot rescue an unvectorized inner loop.
     """
     cands: list[Candidate] = [make("csr", "vector")]
+    cands.extend(make("merge", "scan", chunk=int(c)) for c in merge_chunks)
     if kind == "spmv":
         if include_scalar:
             cands.append(make("csr", "scalar"))
@@ -286,6 +309,24 @@ def estimate_cost(
             spmv_app_bytes(m, n, a.nnz, val_bytes, idx_bytes)
             if k == 1
             else spmm_app_bytes(m, n, a.nnz, k, val_bytes, idx_bytes)
+        )
+        # Row-parallel decomposition: effective bytes degrade with nnz/row
+        # dispersion (see ROW_IMBALANCE_WEIGHT above).  SELL pays this
+        # through padded slots; merge is immune by construction.
+        cv = min(float(feats.nnz_row_cv), ROW_IMBALANCE_CV_CAP)
+        bytes_ = bytes_ * (1.0 + ROW_IMBALANCE_WEIGHT * cv)
+    elif cand.fmt == "merge":
+        # Equal-nnz chunks: padded product stream in, two-level scan
+        # (read + write ~ one extra pass over the products), two prefix-table
+        # gathers per row.  No term depends on the row distribution — that
+        # is the tier's reason to exist.
+        chunk = max(1, int(p["chunk"]))
+        nnz_pad = max(1, -(-a.nnz // chunk)) * chunk
+        bytes_ = (
+            nnz_pad * (val_bytes + idx_bytes)  # data + indices streams
+            + n * k * val_bytes  # x gather
+            + 2 * nnz_pad * k * val_bytes  # scan write + gather-back
+            + m * (2 * idx_bytes + k * val_bytes)  # start/end + y out
         )
     elif cand.fmt in ("sell", "sell_blocked"):
         lengths = np.diff(a.indptr).astype(np.int64)

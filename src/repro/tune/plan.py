@@ -36,7 +36,10 @@ from .candidates import Candidate, make
 
 __all__ = ["PLAN_VERSION", "Plan", "PlanCache", "fingerprint", "default_cache"]
 
-PLAN_VERSION = 3  # v3: mesh_shape recorded, topology changes invalidate
+# v4: the merge tier joined the candidate space and CSR prepared dicts carry
+# the hoisted row map — v3 plans were picked from a smaller space against a
+# slower baseline, so they are dropped and re-searched rather than served.
+PLAN_VERSION = 4
 
 _ENV_CACHE = "REPRO_TUNE_CACHE"
 _DEFAULT_CACHE = "~/.cache/repro_tune/plans.json"

@@ -1,13 +1,25 @@
-"""The paper's timing protocol (§4: warm up, then average steady-state runs),
+"""The paper's timing protocol (§4: warm up, then steady-state runs),
 shared by the benchmark harness and the autotuner.
 
 ``benchmarks/common.py`` re-exports :func:`time_fn` so every figure and the
 ``repro.tune`` measured search time candidates with the *same* clock and the
 same warmup/measure discipline — tuning decisions transfer to the benchmark
 columns by construction.
+
+Robustness discipline (tuner decisions on noisy machines must not flap
+between near-tied candidates):
+
+* warmup runs are always discarded (the first of them eats compilation);
+* the reported figure is the **median** of the timed reps, not the mean —
+  one scheduler hiccup cannot move it;
+* ``REPRO_TUNE_REPS`` (and ``REPRO_TUNE_WARMUP``) set a *floor* on the rep
+  counts of every call: callers ask for what their budget affords, a noisy
+  CI machine exports ``REPRO_TUNE_REPS=25`` and every measurement in the
+  process — search and benchmarks alike — gets at least that many reps.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -20,9 +32,32 @@ __all__ = ["WARMUP", "TIMED", "time_fn"]
 WARMUP = 3
 TIMED = 10
 
+_ENV_REPS = "REPRO_TUNE_REPS"
+_ENV_WARMUP = "REPRO_TUNE_WARMUP"
+
+
+def _floor_from_env(name: str, value: int) -> int:
+    raw = os.environ.get(name)
+    if not raw:
+        return value
+    try:
+        return max(value, int(raw))
+    except ValueError:
+        return value
+
 
 def time_fn(fn, *args, warmup: int = WARMUP, timed: int = TIMED) -> float:
-    """Median wall time (seconds) over ``timed`` runs after ``warmup``."""
+    """Median wall time (seconds) over ``timed`` runs after ``warmup``.
+
+    Warmup runs are discarded (compilation lands in the first); the env
+    floors above can raise both counts process-wide.  A floored ``timed``
+    also forces ``warmup >= 1`` so the median never includes a compile.
+    """
+    timed_floored = _floor_from_env(_ENV_REPS, max(int(timed), 1))
+    if timed_floored > timed:  # env raised reps: never time a cold function
+        warmup = max(warmup, 1)
+    timed = timed_floored
+    warmup = _floor_from_env(_ENV_WARMUP, int(warmup))
     out = None
     for _ in range(warmup):
         out = fn(*args)

@@ -1,14 +1,26 @@
 """Edge cases for the kernel prep/dispatch layers, all against the dense
 oracle: empty matrices and trailing empty rows (_rows_from_indptr), column
 slabs that receive zero nonzeros (sell_prepare_blocked), all-empty block
-rows (bcsr_prepare) — plus the regression test that the vectorized
-searchsorted slab split equals the original python row loop."""
+rows (bcsr_prepare), pathological row-length distributions (empty rows, one
+fully-dense row, power-law nnz) swept across every enumerated candidate
+including the merge tier — plus regression tests that the vectorized
+searchsorted slab split equals the original python row loop and that the
+prepared CSR hot path carries no per-dispatch searchsorted."""
+import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.formats import bcsr_from_csr, csr_from_dense
-from repro.core.spmv import _rows_from_indptr, spmv_csr, spmv_csr_scalar
+from repro.core.spmv import (
+    _rows_from_indptr,
+    csr_prepare,
+    spmm_csr,
+    spmv_csr,
+    spmv_csr_scalar,
+)
 from repro.kernels import ops as kops
+from repro.kernels.merge_spmv import merge_prepare, merge_spmm, merge_spmv
 
 
 # ---------------------------------------------------------------------------
@@ -117,3 +129,119 @@ def test_sell_prepare_blocked_vectorized_matches_loop():
                     np.asarray(fs[key]), np.asarray(ss[key]),
                     err_msg=f"slab {s} key {key} (n_slabs={n_slabs})",
                 )
+
+
+# ---------------------------------------------------------------------------
+# Hoisted row map: no per-dispatch searchsorted on the prepared CSR path
+# ---------------------------------------------------------------------------
+def test_csr_prepare_hoists_row_map_out_of_dispatch():
+    rng = np.random.default_rng(5)
+    d = ((rng.random((48, 40)) < 0.15) * rng.standard_normal((48, 40))).astype(
+        np.float32
+    )
+    a = csr_from_dense(d)
+    prep = csr_prepare(a)
+    np.testing.assert_array_equal(
+        np.asarray(prep["rows"]),
+        np.repeat(np.arange(48), np.diff(a.indptr)),
+    )
+    x = jnp.asarray(rng.standard_normal(40).astype(np.float32))
+    X = jnp.asarray(rng.standard_normal((40, 4)).astype(np.float32))
+    # The prepared-dict program must not re-derive the row map per dispatch.
+    jpr_v = str(jax.make_jaxpr(lambda p, v: spmv_csr(p, v, n_rows=48))(prep, x))
+    jpr_m = str(jax.make_jaxpr(lambda p, v: spmm_csr(p, v, n_rows=48))(prep, X))
+    assert "searchsorted" not in jpr_v
+    assert "searchsorted" not in jpr_m
+    # Raw-dict callers keep working through the compat shim (which does).
+    raw = a.device()
+    jpr_raw = str(jax.make_jaxpr(lambda p, v: spmv_csr(p, v, n_rows=48))(raw, x))
+    assert "searchsorted" in jpr_raw
+    for fn, ref in ((spmv_csr, d @ np.asarray(x)),):
+        np.testing.assert_allclose(
+            np.asarray(fn(prep, x, n_rows=48)), ref, atol=1e-4
+        )
+        np.testing.assert_allclose(
+            np.asarray(fn(raw, x, n_rows=48)), ref, atol=1e-4
+        )
+    np.testing.assert_allclose(
+        np.asarray(spmm_csr(prep, X, n_rows=48)), d @ np.asarray(X), atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# Merge tier edges
+# ---------------------------------------------------------------------------
+def test_merge_empty_matrix_and_oversized_chunk():
+    a = csr_from_dense(np.zeros((6, 9), np.float32))
+    prep = merge_prepare(a, chunk=4096)  # chunk >> nnz: one padded chunk
+    y = np.asarray(merge_spmv(prep, jnp.ones(9, jnp.float32)))
+    np.testing.assert_allclose(y, np.zeros(6))
+    d = np.zeros((5, 4), np.float32)
+    d[2, 1] = 3.0
+    a2 = csr_from_dense(d)
+    prep2 = merge_prepare(a2, chunk=1)  # chunk of one: all-boundary rows
+    x = np.arange(1.0, 5.0, dtype=np.float32)
+    np.testing.assert_allclose(
+        np.asarray(merge_spmv(prep2, jnp.asarray(x))), d @ x, atol=1e-6
+    )
+    X = np.stack([x, 2 * x], axis=1)
+    np.testing.assert_allclose(
+        np.asarray(merge_spmm(prep2, jnp.asarray(X))), d @ X, atol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pathological row distributions x every enumerated candidate
+# ---------------------------------------------------------------------------
+def _pathological(kind_, m=72, n=96, seed=0):
+    rng = np.random.default_rng(seed)
+    d = np.zeros((m, n), np.float32)
+    if kind_ == "empty_rows":
+        mask = rng.random((m, n)) < 0.1
+        mask[::3] = False  # every third row empty, incl. leading/trailing runs
+        mask[:4] = False
+        mask[-4:] = False
+        d = (mask * rng.standard_normal((m, n))).astype(np.float32)
+    elif kind_ == "one_dense_row":
+        d = ((rng.random((m, n)) < 0.03)
+             * rng.standard_normal((m, n))).astype(np.float32)
+        d[m // 2] = rng.standard_normal(n).astype(np.float32)  # fully dense
+    elif kind_ == "powerlaw":
+        lens = np.minimum((n / np.arange(1, m + 1) ** 1.2).astype(int) + 1, n)
+        rng.shuffle(lens)
+        for r, ln in enumerate(lens):
+            cols = rng.choice(n, size=ln, replace=False)
+            d[r, cols] = rng.standard_normal(ln).astype(np.float32)
+    return d, csr_from_dense(d)
+
+
+@pytest.mark.parametrize("dist", ["empty_rows", "one_dense_row", "powerlaw"])
+def test_pathological_rows_every_candidate_matches_oracle(dist):
+    from repro.tune import SparseOperator, enumerate_candidates, extract, make
+
+    d, a = _pathological(dist)
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal(a.shape[1]).astype(np.float32)
+    X = rng.standard_normal((a.shape[1], 8)).astype(np.float32)
+
+    spmv_cands = enumerate_candidates(extract(a))
+    assert any(c.fmt == "merge" for c in spmv_cands)
+    # The column-slab variants only self-enumerate when x exceeds VMEM;
+    # force them in so the skew sweep covers the stacked pipeline kernel.
+    spmv_cands += [
+        make("sell_blocked", "ref", C=8, sigma=64, n_slabs=3),
+        make("sell_blocked", "pallas", C=8, sigma=64, n_slabs=3),
+    ]
+    for cand in spmv_cands:
+        op = SparseOperator.from_candidate(a, cand)
+        got = np.asarray(op @ jnp.asarray(x))
+        np.testing.assert_allclose(
+            got, d @ x, atol=2e-3, err_msg=f"{dist}: {cand.key()}"
+        )
+
+    for cand in enumerate_candidates(extract(a, k=8), kind="spmm"):
+        op = SparseOperator.from_candidate(a, cand, k=8)
+        got = np.asarray(op @ jnp.asarray(X))
+        np.testing.assert_allclose(
+            got, d @ X, atol=5e-3, err_msg=f"{dist}: {cand.key()}"
+        )
