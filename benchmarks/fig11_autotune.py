@@ -32,7 +32,11 @@ def main(lines: list):
     rng = np.random.default_rng(0)
     for name, a in mats.items():
         x = jnp.asarray(rng.standard_normal(a.shape[1]).astype(np.float32))
-        op = SparseOperator.build(a, cache=cache, warmup=1, timed=5)
+        # race=False: this figure IS the full measured comparison — racing
+        # would abandon a >3x-slower csr/vector after one rep (inf), losing
+        # the quantitative speedup column the row exists to report.
+        op = SparseOperator.build(a, cache=cache, warmup=1, timed=5,
+                                  race=False)
         t_csr = op.measurements["csr/vector"]  # baseline always survives
         t_best = op.plan.measured_s
         op2 = SparseOperator.build(a, cache=cache)  # must hit the plan cache

@@ -103,6 +103,7 @@ def main(lines: list, *, smoke: bool = False) -> None:
                     f"fig12_{name}_load{load}", t_eng / load,
                     f"req_s={load / t_eng:.1f};seq_req_s={load / t_seq:.1f};"
                     f"speedup={speedup:.2f};occupancy={s['occupancy']:.2f};"
+                    f"padded_occupancy={s['padded_occupancy']:.2f};"
                     f"by_bucket={s['by_bucket']};table_hit={table_hit}"))
             assert table_hit, f"{name}: restarted engine re-searched plans"
             if beat_at_16 is not None and beat_at_16 > 1.0:

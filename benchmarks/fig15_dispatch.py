@@ -1,0 +1,300 @@
+"""Dispatch overhead: the serving hot path vs the pre-PR synchronous stack.
+
+Not a figure from the paper — it closes the paper's amortization argument
+(Fig 9: matrix traffic amortized over many RHS columns) over *dispatch*:
+once the kernel is memory-optimal, what remains per batch is host-side
+latency — Python RHS stacking, pytree flattening of prepared dicts, jit
+cache lookups, and the synchronous block between batches.  Per
+(matrix, k-bucket) the row reports:
+
+  kernel_us      the bucket plan's bound kernel behind one warmed jit call
+                 on a preassembled operand — the irreducible cost, in the
+                 same call style (C++ jit fastpath) the engine dispatches
+                 (NOT ``SparseOperator.aot``: an AOT ``Compiled.__call__``
+                 is ~20us/call slower on CPU and would understate every
+                 overhead figure)
+  legacy_us      end-to-end per-batch cost of the pre-PR path (eager
+                 ``jnp.stack`` into a per-bucket jitted function, blocking
+                 per batch)
+  sync_us        hot path (ring assembly + persistent executables), still
+                 retiring every batch before the next (``async_depth=0``)
+  async_us       the full async double-buffered loop (``async_depth=2``)
+  ovh_legacy/ovh_async
+                 the dispatch overhead each path adds on top of kernel_us
+  ratio          ovh_legacy / ovh_async per bucket (informational)
+
+The gated claim (``--smoke`` only): per matrix, the overhead AGGREGATED
+across k in {1, 4} — sum of (end-to-end − kernel) over the two smallest
+buckets, the per-batch host cost a serving deployment actually pays at low
+occupancy — drops >= 2x vs the pre-PR synchronous path on at least 3 suite
+matrices.  Aggregation keeps the gate off the noise floor: the per-bucket
+ratios hover near the threshold exactly when a bucket's overhead is a few
+tens of microseconds, where one scheduler hiccup flips the sign.  Full
+scale reports the rows without gating: ms-scale kernel noise enters both
+overhead terms via the shared baseline and swamps the ~100us quantity
+under test.
+  occupancy/padded_occupancy
+                 true vs padding occupancy of the engine burst (bursts are
+                 exact multiples of k, so occupancy is 1.0 here)
+
+Async results must be bitwise-equal to the synchronous engine (both run the
+same executables); the legacy baseline agrees numerically (different XLA
+program).  ``--json PATH`` additionally emits machine-readable
+``BENCH_dispatch.json`` so CI tracks the overhead trajectory per bucket.
+
+Run standalone (``--smoke`` shrinks scale/batches for CI):
+
+  PYTHONPATH=src python -m benchmarks.fig15_dispatch [--smoke] [--json F]
+"""
+import json
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.engine import SparseEngine
+from repro.tune import PlanCache, SparseOperator
+
+from .common import row, suite
+
+MATRICES = ("cant", "scircuit", "pdb1HYS", "shallow_water1")
+KS = (1, 4, 16)
+SCALE = 1 / 64
+N_BATCHES = 32
+REPEATS = 9  # interleaved best-of rounds: min is robust to scheduler noise
+RATIO_CAP = 9999.0  # async overhead often measures ~0 (overlap); cap display
+
+
+def _kernel_burst(fn, xk, n_batches: int) -> float:
+    """Per-call seconds for the bare executable, burst discipline.
+
+    Calls are issued back-to-back with one trailing block — the same
+    pipelining the async engine gets — so this is pure device throughput
+    per batch.  Every path below is measured with the identical burst
+    structure; subtracting this from an end-to-end figure isolates exactly
+    the dispatch overhead that path adds.
+    """
+    t0 = time.perf_counter()
+    ys = None
+    for _ in range(n_batches):
+        ys = fn(xk)
+    jax.block_until_ready(ys)
+    return (time.perf_counter() - t0) / n_batches
+
+
+def _engine_burst(eng: SparseEngine, xs, n_batches: int) -> float:
+    """Steady-state per-batch seconds: submit all, drain the burst.
+
+    The burst is an exact multiple of the engine's single bucket, so every
+    dispatch is a full batch; stats are reset per burst so ``eng.stats``
+    describes exactly the last measured one.
+    """
+    eng.stats = type(eng.stats)()
+    t0 = time.perf_counter()
+    for x in xs:
+        eng.submit(x)
+    eng.drain()
+    return (time.perf_counter() - t0) / n_batches
+
+
+def _measure_paths(paths: dict) -> dict:
+    """Best-of-REPEATS for every path, interleaved round-robin.
+
+    One round times every path back-to-back before the next round starts,
+    so slow phases of the machine (scheduler drift, cache pollution from an
+    unrelated process) hit all paths alike instead of biasing whichever
+    path happened to run during them; the per-path min then comes from the
+    quietest rounds.
+    """
+    best = {name: float("inf") for name in paths}
+    for _ in range(REPEATS):
+        for name, burst in paths.items():
+            best[name] = min(best[name], burst())
+    return best
+
+
+def _collect_ys(eng: SparseEngine, xs) -> list[np.ndarray]:
+    return [np.asarray(y) for y in eng.run(xs)]
+
+
+def main(lines: list, *, smoke: bool = False, json_path: str | None = None) -> None:
+    scale = 1 / 256 if smoke else SCALE
+    ks = (1, 4) if smoke else KS
+    n_batches = 24 if smoke else N_BATCHES
+    mats = {name: suite(scale)[name] for name in MATRICES}
+    rng = np.random.default_rng(0)
+    report: dict = {}
+    win_at_small_k: dict[str, bool] = {}
+    measured: dict = {}  # name -> (paths_by_k, best_by_k, stats_by_k)
+    with tempfile.TemporaryDirectory() as td:
+        for name, a in mats.items():
+            cache_path = Path(td) / f"{name}.json"
+            # One measured search per (matrix, k); every engine below reloads
+            # the same plan table from this cache.
+            ops = SparseOperator.build_multi(
+                a, ks=ks, cache=PlanCache(cache_path), warmup=1, timed=3
+            )
+            report[name] = {}
+            paths_by_k: dict = {}
+            stats_by_k: dict = {}
+            best_by_k: dict = {}
+            for k in ks:
+                xs = [
+                    jnp.asarray(rng.standard_normal(a.shape[1])
+                                .astype(np.float32))
+                    for _ in range(k * n_batches)
+                ]
+                # Kernel-only: the bucket's bound runner behind ONE warmed
+                # jit closure — the same call style (C++ jit fastpath) as
+                # the engine's fused executables, minus all engine plumbing.
+                # (An AOT Compiled.__call__ baseline would be ~20us/call
+                # slower on CPU and systematically understate every
+                # overhead = e2e - kernel figure.)
+                shape = (a.shape[1],) if k == 1 else (a.shape[1], k)
+                xk = jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+                _run = ops[k]._run
+                kernel_fn = jax.jit(lambda x, _r=_run: _r(x))
+
+                def make(_k=k, **kw):
+                    return SparseEngine(a, ks=(_k,),
+                                        cache=PlanCache(cache_path), **kw)
+
+                legacy = make(legacy_dispatch=True)
+                sync = make(async_depth=0)
+                async_ = make(async_depth=2)
+                # Compile every path outside the timed window.
+                jax.block_until_ready(kernel_fn(xk))
+                for eng in (legacy, sync, async_):
+                    eng.run(xs[:k])
+                paths_by_k[k] = {
+                    "kernel": lambda _f=kernel_fn, _x=xk:
+                        _kernel_burst(_f, _x, n_batches),
+                    "legacy": lambda _e=legacy, _xs=xs:
+                        _engine_burst(_e, _xs, n_batches),
+                    "sync": lambda _e=sync, _xs=xs:
+                        _engine_burst(_e, _xs, n_batches),
+                    "async": lambda _e=async_, _xs=xs:
+                        _engine_burst(_e, _xs, n_batches),
+                }
+                best_by_k[k] = _measure_paths(paths_by_k[k])
+                stats_by_k[k] = async_.stats.summary()
+
+                # Numerics: async == sync bitwise (same executables); the
+                # legacy program agrees numerically.
+                burst = xs[: 2 * k + max(0, k - 1)]  # full + partial buckets
+                ys_sync = _collect_ys(make(async_depth=0), burst)
+                ys_async = _collect_ys(make(async_depth=2), burst)
+                ys_legacy = _collect_ys(make(legacy_dispatch=True), burst)
+                for ya, ysn, yl in zip(ys_async, ys_sync, ys_legacy):
+                    assert np.array_equal(ya, ysn), (
+                        f"{name} k={k}: async result != sync result")
+                    np.testing.assert_allclose(ya, yl, atol=1e-5)
+
+            measured[name] = (paths_by_k, best_by_k, stats_by_k)
+
+        def matrix_agg(best):
+            agg = {"legacy": 0.0, "async": 0.0}
+            for k in ks:
+                if k in (1, 4):
+                    kern = best[k]["kernel"]
+                    agg["legacy"] += max(best[k]["legacy"] - kern, 0.0)
+                    agg["async"] += max(best[k]["async"] - kern, 0.0)
+            return agg
+
+        def wins(best):
+            agg = matrix_agg(best)
+            return agg["legacy"] >= 2.0 * agg["async"]
+
+        # Per-path minima only sharpen with more rounds, so while the gate
+        # would fail, re-measure the losing matrices and min-merge: a noisy
+        # phase of the machine (which can span several matrices' rounds)
+        # recovers toward the quiet-machine ratio once it passes, while a
+        # structural regression stays below the bar through every retry.
+        for _retry in range(2):
+            if not smoke or sum(
+                wins(b) for _, b, _s in measured.values()
+            ) >= 3:
+                break
+            for name, (paths_by_k, best_by_k, _s) in measured.items():
+                if wins(best_by_k):
+                    continue
+                for k in ks:
+                    again = _measure_paths(paths_by_k[k])
+                    best_by_k[k] = {
+                        p: min(best_by_k[k][p], again[p]) for p in again
+                    }
+
+        for name, (paths_by_k, best_by_k, stats_by_k) in measured.items():
+            agg = matrix_agg(best_by_k)
+            for k in ks:
+                t = best_by_k[k]
+                kernel_s, t_legacy, t_sync, t_async = (
+                    t["kernel"], t["legacy"], t["sync"], t["async"]
+                )
+                s = stats_by_k[k]
+                ovh_legacy = max(t_legacy - kernel_s, 0.0)
+                ovh_async = max(t_async - kernel_s, 0.0)
+                ratio = min(ovh_legacy / max(ovh_async, 1e-9), RATIO_CAP)
+                report[name][str(k)] = {  # str: json keys sort uniformly
+                    "kernel_us": round(kernel_s * 1e6, 2),
+                    "legacy_us": round(t_legacy * 1e6, 2),
+                    "sync_us": round(t_sync * 1e6, 2),
+                    "async_us": round(t_async * 1e6, 2),
+                    "overhead_legacy_us": round(ovh_legacy * 1e6, 2),
+                    "overhead_async_us": round(ovh_async * 1e6, 2),
+                    "overhead_ratio": round(ratio, 2),
+                    "occupancy": s["occupancy"],
+                    "padded_occupancy": s["padded_occupancy"],
+                }
+                lines.append(row(
+                    f"fig15_{name}_k{k}", t_async,
+                    f"kernel_us={kernel_s * 1e6:.1f};"
+                    f"legacy_us={t_legacy * 1e6:.1f};"
+                    f"sync_us={t_sync * 1e6:.1f};"
+                    f"async_us={t_async * 1e6:.1f};"
+                    f"ovh_ratio={ratio:.2f};"
+                    f"occupancy={s['occupancy']:.2f};"
+                    f"padded_occupancy={s['padded_occupancy']:.2f}"))
+
+            win_at_small_k[name] = agg["legacy"] >= 2.0 * agg["async"]
+            report[name]["agg_small_k"] = {
+                "overhead_legacy_us": round(agg["legacy"] * 1e6, 2),
+                "overhead_async_us": round(agg["async"] * 1e6, 2),
+                "ratio": round(min(agg["legacy"] / max(agg["async"], 1e-9),
+                                   RATIO_CAP), 2),
+            }
+    if json_path:  # written before the assert: CI keeps the trajectory
+        Path(json_path).write_text(json.dumps(report, indent=1, sort_keys=True))
+    n_win = sum(win_at_small_k.values())
+    if smoke:
+        # The overhead claim is asserted at smoke scale, where kernels run
+        # in the tens of microseconds and dispatch overhead IS the signal.
+        # At full scale the kernels are ms-scale: the same +-hundreds-of-us
+        # kernel-timing noise enters both overhead terms through the shared
+        # baseline subtraction and swamps the ~100us quantity under test,
+        # so full runs report the rows without gating on the ratio.
+        assert n_win >= 3, (
+            f"hot path cut per-batch dispatch overhead (aggregated over "
+            f"k in (1, 4)) >= 2x on only {n_win}/{len(mats)} matrices "
+            f"({win_at_small_k})"
+        )
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small scale + fewer batches for CI")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write per-(matrix, k) overhead_us/kernel_us "
+                         "to this JSON file (CI perf tracking)")
+    args = ap.parse_args()
+    lines = ["name,us_per_call,derived"]
+    main(lines, smoke=args.smoke, json_path=args.json)
+    print("\n".join(lines))
+    print("# fig15 ok", file=sys.stderr)

@@ -30,6 +30,7 @@ def main() -> None:
         fig12_engine,
         fig13_mesh_engine,
         fig14_imbalance,
+        fig15_dispatch,
         table2_register_blocking,
     )
 
@@ -48,6 +49,7 @@ def main() -> None:
         "fig12": fig12_engine,
         "fig13": fig13_mesh_engine,  # shard sweep adapts to visible devices
         "fig14": fig14_imbalance,
+        "fig15": fig15_dispatch,
     }
     only = set(args.only.split(",")) if args.only else None
     lines: list = ["name,us_per_call,derived"]

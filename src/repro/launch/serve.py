@@ -56,11 +56,13 @@ def serve_sparse(args) -> None:
         from repro.launch.shardspecs import sparse_rhs_sharding
 
         mesh = make_spmm_mesh(args.mesh_shards)
-        eng = SparseEngine(a, ks=ks, mesh=mesh, max_wait_s=max_wait_s)
+        eng = SparseEngine(a, ks=ks, mesh=mesh, max_wait_s=max_wait_s,
+                           async_depth=args.async_depth)
     else:
         mesh = None
         eng = SparseEngine(a, ks=ks, n_shards=args.shards,
-                           max_wait_s=max_wait_s)  # on-disk plan cache
+                           max_wait_s=max_wait_s,  # on-disk plan cache
+                           async_depth=args.async_depth)
     t_build = time.perf_counter() - t0
     rng = np.random.default_rng(0)
     xs = [
@@ -88,6 +90,7 @@ def serve_sparse(args) -> None:
         while eng.pending:
             if eng.step() == 0:
                 time.sleep(min(max_wait_s / 4, 1e-3))
+        eng.flush()  # retire the async in-flight window
     dt = time.perf_counter() - t0
     flops = 2 * a.nnz * len(xs)
     s = eng.stats.summary()
@@ -104,16 +107,19 @@ def serve_sparse(args) -> None:
     else:
         src = f"searched in {t_build:.1f}s"
     lat = sorted(r.latency_s for r in reqs)
+    raced = sum(op.plan.n_raced for op in eng.ops.values())
     print(
         f"served {len(xs)} spmv requests on {args.sparse}@{args.scale:g} "
         f"({a.shape[0]}x{a.shape[1]}, nnz={a.nnz}) in {dt:.3f}s "
-        f"({len(xs) / dt:.1f} req/s, {flops / dt / 1e9:.2f} GF/s)\n"
+        f"({len(xs) / dt:.1f} req/s, {flops / dt / 1e9:.2f} GF/s, "
+        f"async_depth={eng.async_depth})\n"
         f"  dispatches={s['dispatches']} by_bucket={s['by_bucket']} "
         f"occupancy={s['occupancy']:.2f} "
+        f"(padding {s['padded_occupancy']:.2f} — not served work) "
         f"latency mean/p50/p99 = {s['latency_mean_ms']:.2f}/"
         f"{lat[len(lat) // 2] * 1e3:.2f}/{s['latency_p99_ms']:.2f} ms\n"
         f"  plans={plans}\n"
-        f"  ({src})"
+        f"  ({src}; {raced} candidates pruned by racing)"
     )
 
 
@@ -169,6 +175,10 @@ def main():
                     help="admission control: dispatch a partial bucket once "
                          "its oldest request has waited this long "
                          "(0 = dispatch immediately)")
+    ap.add_argument("--async-depth", type=int, default=2,
+                    help="in-flight dispatch window (0 = fully synchronous; "
+                         "2 = double-buffered: batch t+1 assembles while "
+                         "batch t computes)")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)

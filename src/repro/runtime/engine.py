@@ -8,32 +8,48 @@ SpMV requests into stacked right-hand-side batches (columns of X), and
 dispatches each batch through the ``repro.tune`` plan tuned for that width.
 
 Plans are held per *k-bucket* (default k in {1, 4, 16, 64}); a batch of b
-pending requests is rounded up to the smallest bucket >= b and padded with
-zero columns.  Occupancy therefore decides at runtime whether the k=1 SpMV
-plan (CSR-vector / SELL) or a wide SpMM plan (CSR gather / BCSR) runs — the
-serving analogue of the paper's Fig 9 crossover.  Because the bucket plans
-come from the measured search, skewed matrices (high nnz-row CV) land on
-the nnz-balanced merge tier automatically: the imbalance cost term steers
-the pruning and the timing settles it, per bucket — no engine-side format
-policy.  The bucket plan table comes from
+pending requests is rounded up to the smallest bucket >= b.  Occupancy
+therefore decides at runtime whether the k=1 SpMV plan (CSR-vector / SELL)
+or a wide SpMM plan (CSR gather / BCSR) runs — the serving analogue of the
+paper's Fig 9 crossover.  The bucket plan table comes from
 :meth:`repro.tune.SparseOperator.build_multi` and lives in the shared JSON
 plan cache, so a restarted engine reloads every bucket's plan without
-re-searching; buckets sharing a winning format also share ONE prepared-dict
-instance (preparation is memoized on the structure fingerprint + value
-digest — k never enters preparation).
+re-searching.
+
+**The zero-overhead hot path** (``runtime.executable``): steady-state
+serving does no avoidable host work per batch.
+
+* Each k-bucket lowers ONCE to a persistent compiled executable with the
+  plan's prepared-dict leaves closed over as compile-time constants — a
+  dispatch is one warmed-fastpath invocation, with no per-call pytree
+  flattening of index arrays and no re-trace.
+* Batches assemble ON DEVICE, inside that same single program: the
+  (already device-resident) request vectors stack straight into the RHS
+  slab — never a host ``np.stack``.  Burst tails reuse the bucket's one
+  program by padding the argument list with a shared device-resident zero
+  column (bit-identical to the synchronous padding), so a novel occupancy
+  never recompiles mid-serving.  (See ``runtime.executable`` for why the
+  dispatch path does not *donate* the slab on this backend, and where
+  donation is kept instead.)
+* The loop is asynchronous and double-buffered: ``step()`` dispatches
+  without blocking and keeps up to ``async_depth`` (<= 2) batches in
+  flight, so the host aggregates and assembles batch t+1 while the device
+  computes batch t.  ``submit()`` returns immediately with a future-like
+  ticket — ``req.result()`` blocks for exactly that request;
+  ``drain()``/``flush()`` retire everything.  Results are
+  bitwise-identical to a synchronous engine (``async_depth=0``) because
+  both run the same executables.
+
+``legacy_dispatch=True`` keeps the pre-hot-path behavior — eager per-batch
+``jnp.stack`` into a per-bucket jitted function, fully synchronous — as the
+measured baseline for ``benchmarks/fig15_dispatch.py``.
 
 Row-partitioned mode (``n_shards > 1``) routes batches through
-``core.distributed.stacked_spmm`` instead: the matrix is split by
-``core.partition.rows_balanced`` and every shard runs under one vmapped
-dispatch — the same aggregation idea applied across the row dimension.
-
-Mesh mode (``mesh=``/``axis=``) is the real distributed serving path: A is
-partitioned across the mesh axis (``core.partition`` + ``core.distributed``)
-and every k-bucket's dispatch runs under shard_map, with the tuner choosing
-*per bucket* between the allgather and ring collective schedules (the
-schedule is a candidate dimension; plans record the mesh topology, so a
-restart on the same mesh reloads the whole per-(k, mesh_shape) table and a
-topology change re-searches).
+``core.distributed.stacked_spmm``: the same ring assembly feeds one vmapped
+shard dispatch compiled into the bucket executable.  Mesh mode
+(``mesh=``/``axis=``) partitions A across a real device mesh: ring assembly
+compiles to a slab executable whose output feeds the bucket's shard_map
+schedule through a donation-enabled runner (the engine owns its slabs).
 
 ``max_wait_s`` adds admission control: ``step()`` holds a partial bucket
 back while more requests may still arrive, but dispatches it as soon as the
@@ -60,16 +76,23 @@ import numpy as np
 from repro.core.distributed import assemble_rows, stacked_spmm
 from repro.core.formats import CSRMatrix
 from repro.core.partition import rows_balanced, stack_csr_shards
+from repro.runtime.executable import fused_batch_executable
 from repro.tune import PlanCache, SparseOperator
+from repro.tune.operator import runner as _bind_runner
 
 __all__ = ["SparseEngine", "EngineRequest", "EngineStats", "K_BUCKETS"]
 
 K_BUCKETS = (1, 4, 16, 64)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class EngineRequest:
-    """One queued y = A @ x request; filled in when its batch completes."""
+    """One queued y = A @ x request — a future filled in at retirement.
+
+    ``submit()`` returns immediately; the batch the request rides in may
+    still be in flight on the device.  ``result()`` blocks until exactly
+    this request is served (dispatching/retiring as needed) and returns y.
+    """
 
     rid: int
     x: jax.Array  # (n,)
@@ -78,6 +101,7 @@ class EngineRequest:
     bucket: int | None = None  # k-bucket the request was dispatched in
     _ys: jax.Array | None = None  # the whole batch result (m, bucket)
     _col: int = 0  # this request's column of _ys
+    _engine: Any = dataclasses.field(default=None, repr=False, compare=False)
 
     @property
     def done(self) -> bool:
@@ -91,6 +115,14 @@ class EngineRequest:
             return None
         return self._ys[:, self._col] if self._ys.ndim == 2 else self._ys
 
+    def result(self) -> jax.Array:
+        """Block until this request is served; returns y (the future API)."""
+        if self._ys is None:
+            if self._engine is None:
+                raise RuntimeError("request is not attached to an engine")
+            self._engine._fulfill(self)
+        return self.y
+
     @property
     def latency_s(self) -> float:
         assert self.t_done is not None, "request not served yet"
@@ -102,8 +134,8 @@ class EngineStats:
     n_requests: int = 0
     n_dispatches: int = 0
     dispatched: dict = dataclasses.field(default_factory=dict)  # bucket -> #
-    occupied_cols: int = 0  # real request columns dispatched
-    padded_cols: int = 0  # zero columns added by bucket round-up
+    occupied_cols: int = 0  # real request columns dispatched (served work)
+    padded_cols: int = 0  # zero columns added by bucket round-up (NOT work)
     latencies_s: list = dataclasses.field(default_factory=list)
 
     def record(self, bucket: int, n_real: int, lats: Iterable[float]) -> None:
@@ -115,9 +147,22 @@ class EngineStats:
 
     @property
     def occupancy(self) -> float:
-        """Mean fraction of dispatched RHS columns that were real requests."""
+        """TRUE occupancy: real requests / dispatched bucket capacity.
+
+        Padded zero-columns are device work but not served work — they
+        never enter the numerator here (and must not enter any
+        requests-per-second figure derived from these stats).
+        """
         total = self.occupied_cols + self.padded_cols
         return self.occupied_cols / total if total else 0.0
+
+    @property
+    def padded_occupancy(self) -> float:
+        """Fraction of dispatched bucket capacity that was zero padding —
+        the device-time waste of bucket round-up, reported separately so
+        padding can never masquerade as throughput."""
+        total = self.occupied_cols + self.padded_cols
+        return self.padded_cols / total if total else 0.0
 
     def summary(self) -> dict[str, Any]:
         lats = np.asarray(self.latencies_s) if self.latencies_s else np.zeros(1)
@@ -126,6 +171,9 @@ class EngineStats:
             "dispatches": self.n_dispatches,
             "by_bucket": dict(sorted(self.dispatched.items())),
             "occupancy": round(self.occupancy, 4),
+            "padded_occupancy": round(self.padded_occupancy, 4),
+            "served_cols": self.occupied_cols,
+            "padded_cols": self.padded_cols,
             "latency_mean_ms": round(float(lats.mean()) * 1e3, 3),
             "latency_p99_ms": round(float(np.quantile(lats, 0.99)) * 1e3, 3),
         }
@@ -143,9 +191,16 @@ class SparseEngine:
     every dispatch to the row-partitioned ``stacked_spmm`` path (CSR shards
     under one vmap); the tuned plan table is skipped entirely in that mode.
     ``max_wait_s`` caps how long a request may wait for its bucket to fill
-    (None keeps the dispatch-immediately behavior).  Remaining keyword
-    arguments (warmup/timed/force_search/include_reorder/...) pass through
-    to :meth:`SparseOperator.build`.
+    (None keeps the dispatch-immediately behavior).
+
+    ``async_depth`` (0..2, default 2) is the in-flight window: how many
+    dispatched batches may be outstanding before ``step()`` blocks to
+    retire the oldest.  0 is fully synchronous (every step blocks); 2 is
+    the double-buffered loop — batch t+1 assembles while batch t computes.
+    ``legacy_dispatch=True`` restores the pre-hot-path eager-stack dispatch
+    (benchmark baseline).  Remaining keyword arguments
+    (warmup/timed/force_search/include_reorder/...) pass through to
+    :meth:`SparseOperator.build`.
     """
 
     def __init__(
@@ -158,6 +213,8 @@ class SparseEngine:
         mesh: Any = None,
         axis: str | None = None,
         max_wait_s: float | None = None,
+        async_depth: int = 2,
+        legacy_dispatch: bool = False,
         **build_kwargs: Any,
     ):
         if not ks:
@@ -171,6 +228,10 @@ class SparseEngine:
         )
         self.max_wait_s = max_wait_s
         self.n_shards = int(n_shards)
+        # The ring double-buffers across consecutive batches, so at most two
+        # dispatches can be in flight before a buffer must be reused.
+        self.async_depth = max(0, min(int(async_depth), 2))
+        self.legacy_dispatch = bool(legacy_dispatch)
         if mesh is not None:
             if n_shards > 1:
                 raise ValueError("mesh= and n_shards= are mutually exclusive")
@@ -195,9 +256,15 @@ class SparseEngine:
                 a, ks=self.ks, cache=cache, **build_kwargs
             )
         self._queue: deque[EngineRequest] = deque()
+        self._inflight: deque[tuple] = deque()  # (ys, reqs, bucket, take)
         self._rid = 0
-        self._batch_fns: dict[int, Any] = {}  # bucket -> jitted stack+spmm
-        self._zero = jnp.zeros((self.shape[1],), jnp.float32)  # pad column
+        self._execs: dict[int, Any] = {}  # bucket -> persistent executable
+        self._mesh_runs: dict[int, Any] = {}  # bucket -> donating runner
+        self._batch_fns: dict[int, Any] = {}  # legacy: bucket -> jitted stack
+        # Shared device-resident zero column: burst tails pad their argument
+        # list with it so ONE executable per bucket serves every occupancy
+        # (also the legacy path's pad column).
+        self._zero = jnp.zeros((self.shape[1],), jnp.float32)
         self.stats = EngineStats()
 
     # -- queueing -----------------------------------------------------------
@@ -210,13 +277,21 @@ class SparseEngine:
     def pending(self) -> int:
         return len(self._queue)
 
+    @property
+    def in_flight(self) -> int:
+        """Dispatched-but-unretired batches (0..async_depth)."""
+        return len(self._inflight)
+
     def submit(self, x: jax.Array) -> EngineRequest:
-        """Enqueue y = A @ x; returns a ticket filled in by a later step()."""
+        """Enqueue y = A @ x; returns a future filled in by a later step()."""
         if not isinstance(x, jax.Array):  # asarray on a device array costs
             x = jnp.asarray(x)            # ~20us — real vs serving rates
         if x.shape != (self.shape[1],):
             raise ValueError(f"expected x of shape ({self.shape[1]},), got {x.shape}")
-        req = EngineRequest(rid=self._rid, x=x, t_submit=time.perf_counter())
+        if x.dtype != jnp.float32:  # ring slots (and pads) are f32
+            x = x.astype(jnp.float32)
+        req = EngineRequest(rid=self._rid, x=x, t_submit=time.perf_counter(),
+                            _engine=self)
         self._rid += 1
         self._queue.append(req)
         self.stats.n_requests += 1
@@ -229,11 +304,16 @@ class SparseEngine:
         return bucket, take
 
     def step(self, *, force: bool = False) -> int:
-        """Dispatch one aggregated batch; returns #requests served (0 = idle).
+        """Dispatch one aggregated batch; returns #requests dispatched.
 
         Takes up to max(ks) pending requests, rounds the count up to the
-        smallest k-bucket and pads the RHS with zero columns, then runs the
-        bucket's tuned plan (or the sharded dispatch).
+        smallest k-bucket, assembles the batch into the device ring, and
+        launches the bucket's persistent executable WITHOUT blocking on the
+        result: the batch joins the in-flight window and is retired (result
+        readiness awaited, futures filled, stats recorded) either when the
+        window is full, by ``flush()``/``drain()``, or by a request's
+        ``result()``.  With ``async_depth=0`` the dispatch is retired
+        before step() returns (synchronous mode).
 
         Admission control: with ``max_wait_s`` set, a partial bucket (fewer
         pending than max(ks)) is held back — step() returns 0 — until the
@@ -242,6 +322,7 @@ class SparseEngine:
         bypasses the wait and flushes immediately.
         """
         if not self._queue:
+            self._retire_ready()  # idle: resolve futures promptly
             return 0
         if (
             not force
@@ -249,10 +330,141 @@ class SparseEngine:
             and len(self._queue) < self.ks[-1]
             and time.perf_counter() - self._queue[0].t_submit < self.max_wait_s
         ):
+            # Held by the admission gate: use the wait to retire in-flight
+            # batches whose results are already on device, so their
+            # latency stats record availability, not bookkeeping lag.
+            self._retire_ready()
             return 0
         bucket, take = self._bucket_for(len(self._queue))
-        reqs = [self._queue.popleft() for _ in range(take)]
+        pop = self._queue.popleft
+        reqs = []
+        xs = []
+        for _ in range(take):
+            req = pop()
+            reqs.append(req)
+            xs.append(req.x)
 
+        if self.legacy_dispatch:
+            return self._step_legacy(reqs, bucket, take)
+
+        # In-flight window: bound how far dispatch runs ahead of retirement
+        # (two-deep by default — batch t+1 assembles and launches while
+        # batch t computes; retirement stays FIFO).
+        window = max(1, self.async_depth)
+        while len(self._inflight) >= window:
+            self._retire_one()
+
+        if take < bucket:  # burst tail: same program, zero pad columns
+            xs.extend([self._zero] * (bucket - take))
+        ys = self._exec(bucket)(*xs)
+        self._inflight.append((ys, reqs, bucket, take))
+        if self.async_depth == 0:
+            self._retire_one()
+        return take
+
+    def _exec(self, bucket: int):
+        """The bucket's persistent executable: ``(x_0..x_{bucket-1}) -> ys``
+        — on-device assembly and kernel in ONE launch.
+
+        Lowered once per bucket on first use and reused for every occupancy
+        (tails pad their argument list with the shared zero column, so a
+        novel tail size never recompiles mid-serving); prepared arrays are
+        closed over as compile-time constants, so a dispatch is one
+        executable invocation with no pytree flattening.
+        """
+        fn = self._execs.get(bucket)
+        if fn is not None:
+            return fn
+        if self.mesh is not None:
+            # The mesh runner places its RHS across devices before its own
+            # jitted shard_map program runs, so only the slab assembly
+            # lowers here; the expensive collective program is compiled
+            # once per bucket and donates the engine-owned slab.
+            run = self._mesh_runs.get(bucket)
+            if run is None:
+                op = self.ops[bucket]
+                run = self._mesh_runs[bucket] = _bind_runner(
+                    self.a, op.plan.candidate, op._prep, k=op.plan.k,
+                    mesh=self.mesh, axis=self.axis, donate_rhs=True,
+                )
+            asm = fused_batch_executable(None, bucket=bucket)
+
+            def fn(*xs, _asm=asm, _run=run):
+                return _run(_asm(*xs))
+
+        elif self.n_shards > 1:
+            stacked = self._stacked
+            counts = [int(r) for r in self._shard_rows]
+
+            def body(xb):
+                return assemble_rows(stacked_spmm(stacked, xb), counts)
+
+            fn = fused_batch_executable(
+                (lambda x: body(x[:, None])) if bucket == 1 else body,
+                bucket=bucket,
+            )
+        else:
+            fn = fused_batch_executable(
+                self.ops[bucket]._run, bucket=bucket,
+            )
+        self._execs[bucket] = fn
+        return fn
+
+    # -- retirement ---------------------------------------------------------
+    def _retire_one(self) -> int:
+        """Await the oldest in-flight batch; fill its futures + stats."""
+        ys, reqs, bucket, take = self._inflight.popleft()
+        ys.block_until_ready()
+        t_done = time.perf_counter()
+        lats = []
+        for i, req in enumerate(reqs):
+            req._ys = ys
+            req._col = i
+            req.t_done = t_done
+            req.bucket = bucket
+            lats.append(t_done - req.t_submit)
+        self.stats.record(bucket, take, lats)
+        return take
+
+    def _retire_ready(self) -> None:
+        """Retire in-flight batches whose results are already materialized.
+
+        Called at idle points (empty queue, admission-gate holds) so a
+        future resolves — and its latency is stamped — as soon as the
+        caller could actually consume the result, instead of waiting for
+        the window to fill or an explicit flush.  Never blocks: FIFO order
+        stops at the first batch still computing.
+        """
+        while self._inflight and self._inflight[0][0].is_ready():
+            self._retire_one()
+
+    def flush(self) -> int:
+        """Retire every in-flight batch; returns #requests completed."""
+        served = 0
+        while self._inflight:
+            served += self._retire_one()
+        return served
+
+    def _fulfill(self, req: EngineRequest) -> None:
+        """Serve until ``req`` is done (the blocking half of its future).
+
+        Retires the in-flight window FIRST: a request whose batch is
+        already on device resolves without force-dispatching unrelated
+        queued requests past the ``max_wait_s`` admission gate.  Only when
+        ``req`` is still queued does the loop force dispatch — the caller
+        blocking on it overrides the gate for the queue ahead of it.
+        """
+        while req._ys is None:
+            if self._inflight:
+                self._retire_one()
+                continue
+            if self.step(force=True) == 0:
+                if req._ys is not None:  # step's idle-path retire served it
+                    break
+                raise RuntimeError("request is not pending on this engine")
+
+    # -- legacy (pre-hot-path) dispatch: fig15's measured baseline ----------
+    def _step_legacy(self, reqs, bucket: int, take: int) -> int:
         if bucket == 1:
             ys = self._dispatch_one(reqs[0].x)  # (m,)
         else:
@@ -276,14 +488,13 @@ class SparseEngine:
         return self.ops[1] @ x
 
     def _batched_fn(self, bucket: int):
-        """One jitted function per bucket fusing RHS stacking + dispatch.
+        """Legacy per-bucket dispatch: eager list -> jitted stack + kernel.
 
-        The column stack, zero-padding and the plan's kernel compile into a
-        single XLA program, so an aggregated dispatch costs one launch —
-        eager stack/pad overhead would otherwise eat the amortization on
-        small matrices.  Mesh-mode buckets stack eagerly instead: the mesh
-        runner pads and places the RHS on the mesh itself before its jitted
-        shard_map program runs.
+        The pre-hot-path fused program: the column stack, zero-padding and
+        the plan's kernel compile into one XLA program, but every call
+        re-flattens the Python list of columns and the prepared dict, and
+        the caller blocks per batch.  Kept as the measured baseline for
+        ``benchmarks/fig15_dispatch.py``.
         """
         fn = self._batch_fns.get(bucket)
         if fn is None:
@@ -306,18 +517,21 @@ class SparseEngine:
             )
         return fn
 
+    # -- bulk serving -------------------------------------------------------
     def drain(self) -> int:
-        """Dispatch until the queue is empty; returns #requests served.
+        """Dispatch until the queue is empty, then retire every in-flight
+        batch; returns #requests served.
 
         Draining is an explicit flush: it bypasses the ``max_wait_s``
         admission gate (the caller has decided no more requests are coming).
+        The count covers every request retired during the call — including
+        batches that were already in flight when drain() was entered.
         """
-        served = 0
-        while True:
-            n = self.step(force=True)
-            if n == 0:
-                return served
-            served += n
+        before = self.stats.occupied_cols  # incremented per retired request
+        while self.step(force=True):
+            pass
+        self.flush()
+        return self.stats.occupied_cols - before
 
     def run(self, xs: Iterable[jax.Array]) -> list[jax.Array]:
         """Convenience: submit all, drain, return results in submit order."""
@@ -329,5 +543,6 @@ class SparseEngine:
         plans = {k: op.plan.candidate.key() for k, op in self.ops.items()}
         return (
             f"SparseEngine({self.shape[0]}x{self.shape[1]}, nnz={self.a.nnz}, "
-            f"buckets={plans}, shards={self.n_shards})"
+            f"buckets={plans}, shards={self.n_shards}, "
+            f"async_depth={self.async_depth})"
         )

@@ -1,0 +1,107 @@
+"""Persistent compiled dispatch + on-device batch assembly for serving.
+
+The paper's SpMV kernels are latency-bound; after the kernel layer hides its
+own latency (PR 4), what remains on the serving hot path is *host* latency:
+per-call tracing-cache lookups, pytree flattening of prepared format dicts,
+Python-side RHS stacking, a fresh output allocation per batch, and a
+mandatory block between batches.  This module removes it:
+
+* :func:`aot_compile` — lower a function ONCE to an explicitly AOT-compiled
+  executable over given shapes (used by ``SparseOperator.aot`` and the
+  benchmarks' kernel-only baselines).
+
+* :func:`fused_batch_executable` — ONE persistent compiled program per
+  k-bucket that does everything a dispatch needs: assemble the batch's
+  (already device-resident) request vectors into the bucket's RHS slab *on
+  device* and invoke the bucket's tuned kernel in the same launch.  Burst
+  tails reuse the same program — the engine pads the argument list with
+  its preallocated zero column, bit-identical to the synchronous path's
+  zero-column padding, so a novel occupancy never recompiles.  The
+  prepared-dict leaves are closed over as compile-time constants, so no
+  call re-flattens index arrays, and a steady-state batch costs exactly
+  one launch: the same count as the bare kernel, where the pre-PR path
+  paid a list flatten + eager stack + block per batch.
+
+Dispatch-path donation note: the issue's design donates the stacked-RHS
+buffer to the dispatch.  Measured on this jax (0.4.37) CPU backend,
+``donate_argnums`` disqualifies a call from the C++ jit dispatch fastpath —
++70..100us per call of Python argument processing, several times the entire
+overhead budget this module exists to remove — and XLA CPU additionally
+rewrites whole donated buffers on dynamic-index updates.  So the per-batch
+dispatch path deliberately does NOT donate; donation is kept where a buffer
+genuinely wants in-place reuse off the per-call fastpath:
+``SparseOperator.aot(donate_rhs=True)`` (opt-in persistent executables) and
+the mesh runner's engine-owned RHS slabs (``runner(..., donate_rhs=True)``).
+
+The executables returned here are persistent ``jax.jit`` closures rather
+than ``.lower().compile()`` objects: both lower exactly once, but a warmed
+jit call takes the C++ fastpath, which measures ~20us/call cheaper than
+``Compiled.__call__``'s Python path on CPU — at serving rates that is the
+difference ``benchmarks/fig15_dispatch.py`` exists to count.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["aot_compile", "fused_batch_executable"]
+
+
+def aot_compile(fn: Callable, *avals, donate_argnums=()) -> Callable:
+    """Lower ``fn`` once over ``avals`` and return the compiled executable.
+
+    The returned callable accepts exactly the lowered shapes/dtypes and
+    never touches the jit tracing cache.  Closure-captured jax arrays
+    become compile-time constants of the executable.  Prefer this for
+    eager, shape-explicit lowering (operator pins, benchmark baselines);
+    the serving engine's own executables use warmed jit closures instead
+    (see module docstring).
+    """
+    with warnings.catch_warnings():
+        # Donation is best-effort by contract here: when XLA finds no
+        # output/scratch to alias a donated operand with, it ignores the
+        # donation.  Scoped to this lowering — never a process-global
+        # filter that would swallow the diagnostic for user code.
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable"
+        )
+        return (
+            jax.jit(fn, donate_argnums=donate_argnums).lower(*avals).compile()
+        )
+
+
+def fused_batch_executable(run: Callable | None, *, bucket: int) -> Callable:
+    """Persistent compiled ``(x_0..x_{bucket-1}) -> ys`` for one bucket.
+
+    ``run`` is the bucket plan's bound runner (prepared arrays already
+    closed over).  Assembly happens inside the program, on device: the
+    ``bucket`` argument vectors stack straight into the (n, bucket) operand
+    slab — one fused op, no intermediate buffer — and the kernel consumes
+    it in the same launch.
+
+    ONE executable serves every occupancy of the bucket: the engine pads a
+    burst tail's argument list with its preallocated device-resident zero
+    column, which is bit-identical to the synchronous path's zero-column
+    padding and means a novel tail size never triggers a serving-time
+    recompile (a per-occupancy specialization would re-lower the whole
+    kernel for up to bucket-1 tail shapes).
+
+    ``run=None`` returns the slab itself instead of applying a kernel (the
+    mesh path feeds its shard_map runner, which places the slab across
+    devices before its own jitted program runs).
+    """
+    if bucket == 1:
+
+        def fn(x):
+            return x[:, None] if run is None else run(x)
+
+    else:
+
+        def fn(*xs):
+            slab = jnp.stack(xs, axis=1)  # (n, bucket)
+            return slab if run is None else run(slab)
+
+    return jax.jit(fn)

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import collections
 import hashlib
+import math
 from typing import Any, Callable, Iterable
 
 import jax
@@ -27,6 +28,7 @@ import numpy as np
 
 from repro.core.formats import CSRMatrix, bcsr_from_csr, sell_from_csr
 from repro.core.spmv import (
+    csr_bind,
     csr_prepare,
     spmm_bcsr_dense,
     spmm_csr,
@@ -45,7 +47,7 @@ from .candidates import (
 )
 from .features import MatrixFeatures, extract
 from .plan import Plan, PlanCache, default_cache, fingerprint
-from .timing import time_fn
+from .timing import RACE_FACTOR, time_fn
 
 __all__ = ["SparseOperator", "prepare", "prepare_cached", "runner"]
 
@@ -180,12 +182,16 @@ def runner(
     k: int = 1,
     mesh=None,
     axis: str | None = None,
+    donate_rhs: bool = False,
 ) -> Callable[[jax.Array], jax.Array]:
     """Bind a candidate + prepared arrays into ``fn(x) -> y``.
 
     k == 1 binds the SpMV path (x is (n,)); k > 1 binds SpMM (x is (n, k)).
     ``fmt="dist"`` candidates dispatch through the mesh's shard_map schedule
-    and accept either shape (the engine's k-buckets share one runner).
+    and accept either shape (the engine's k-buckets share one runner);
+    ``donate_rhs`` (dist only) donates the RHS buffer to the shard_map
+    program — for callers like the serving engine that own their assembled
+    batch outright and never reuse it after dispatch.
     """
     from repro.kernels import ops as kops
 
@@ -195,7 +201,7 @@ def runner(
 
         if mesh is None or axis is None:
             raise ValueError("dist candidates need mesh= and axis=")
-        return mesh_spmm_runner(mesh, axis, prep)
+        return mesh_spmm_runner(mesh, axis, prep, donate_rhs=donate_rhs)
     method, base = split_reorder(cand)
     if method is not None:
         # y = A x == P^T (PAP^T) (P x): gather x by the permutation, run the
@@ -211,12 +217,14 @@ def runner(
         return jax.jit(fn)
     if cand.fmt == "csr":
         dev = prep["dev"]
-        if k == 1:
-            fn = spmv_csr_scalar if cand.impl == "scalar" else spmv_csr
-            return lambda x: fn(dev, x, n_rows=m)
         if cand.impl == "scalar":
-            raise ValueError("csr/scalar has no SpMM tier (k > 1)")
-        return lambda x: spmm_csr(dev, x, n_rows=m)
+            if k > 1:
+                raise ValueError("csr/scalar has no SpMM tier (k > 1)")
+            return lambda x: spmv_csr_scalar(dev, x, n_rows=m)
+        # Vector tiers bind the prepared leaves as jit constants: x is the
+        # only per-call operand, so serving-rate dispatch never re-flattens
+        # the 4-leaf dict (see core.spmv.csr_bind for the trade).
+        return csr_bind(dev, n_rows=m, k=k)
 
     if cand.fmt == "merge":
         from repro.kernels.merge_spmv import merge_spmm, merge_spmv
@@ -303,6 +311,7 @@ class SparseOperator:
         self._prep = prep
         self._run = runner(a, plan.candidate, prep, k=plan.k, mesh=mesh, axis=axis)
         self._csr_dev: dict | None = prep.get("dev")  # fallback path, lazy
+        self._aot: dict = {}  # donate_rhs -> persistent compiled executable
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -322,6 +331,7 @@ class SparseOperator:
         axis: str | None = None,
         prep_cache: dict | None = None,
         seed: int = 0,
+        race: bool = True,
     ) -> "SparseOperator":
         """Autotune (or fetch the cached plan for) this matrix.
 
@@ -332,6 +342,16 @@ class SparseOperator:
         (paper §4.4).  Cached plans are point measurements: a plan recorded
         on another backend or at another (m, n, nnz) is invalidated and the
         search re-runs.
+
+        ``race`` (default on) enables early-exit candidate racing: survivors
+        are timed cheapest-estimate-first, and one whose first steady-state
+        rep exceeds ``RACE_FACTOR`` x the current best median — confirmed
+        by one more rep, so a lone scheduler blip cannot discard the true
+        best — is abandoned without burning its remaining reps (its
+        measurement is recorded as ``inf`` and counted in
+        ``plan.n_raced``).  Cold-start search latency drops; the winner
+        cannot change unless two candidates are within the factor, which
+        racing by construction never separates.
 
         ``mesh=``/``axis=`` switch the search space to the collective
         schedules (allgather vs ring over ``axis``): the plan records the
@@ -380,14 +400,27 @@ class SparseOperator:
         shape = (a.shape[1],) if kk == 1 else (a.shape[1], kk)
         x = jnp.asarray(rng.standard_normal(shape).astype(np.float32))
 
+        # Cheapest-estimate-first so racing establishes a credible best
+        # early: every later candidate's first rep races against it.
+        survivors = sorted(survivors, key=costs.get)
         measurements: dict[str, float] = {}
         best: tuple[float, Candidate, dict] | None = None
+        n_raced = 0
+        # Racing forces a warmup on every candidate whose first rep might
+        # abort; the FIRST candidate (no best yet, abort=None) must get the
+        # same discipline, or with warmup=0 its lone timed rep would eat
+        # the compile and bias the search against the cheapest estimate.
+        warmup_eff = max(warmup, 1) if race else warmup
         for c in survivors:
             prep = prepare_cached(a, c, fp=fp, mesh=mesh, axis=axis,
                                   prep_cache=prep_cache)
             fn = runner(a, c, prep, k=kk, mesh=mesh, axis=axis)
-            t = time_fn(fn, x, warmup=warmup, timed=timed)
+            abort = RACE_FACTOR * best[0] if (race and best is not None) else None
+            t = time_fn(fn, x, warmup=warmup_eff, timed=timed, abort_above=abort)
             measurements[c.key()] = t
+            if math.isinf(t):
+                n_raced += 1  # abandoned after one rep — pruned by racing
+                continue
             if best is None or t < best[0]:
                 best = (t, c, prep)
         assert best is not None, "pruning left no candidates"
@@ -407,6 +440,7 @@ class SparseOperator:
             backend=backend,
             scale=scale,
             mesh_shape=mesh_shape,
+            n_raced=n_raced,
         )
         cache.put(plan)
         return cls(
@@ -420,16 +454,68 @@ class SparseOperator:
             axis=axis,
         )
 
+    # -- persistent executables ---------------------------------------------
+    def aot(self, *, donate_rhs: bool = False):
+        """AOT-compile this operator's dispatch into a persistent executable.
+
+        Returns a compiled callable over exactly the plan's operand shape
+        ((n,) for a k=1 plan, (n, k) otherwise) with the prepared-dict
+        leaves closed over as compile-time constants — per-call cost is one
+        executable invocation, no tracing, no pytree flattening of index
+        arrays, no shape dispatch.  The serving engine lowers its per-bucket
+        executables this way; benchmarks use it to time exactly the
+        steady-state hot path.
+
+        ``donate_rhs=True`` donates the operand buffer to the executable —
+        the caller hands over ownership per call (a fresh batch each time,
+        as the engine's assembled slabs are), letting XLA reuse it for
+        scratch/output.  A candidate kernel opts in simply by consuming x
+        linearly; nothing format-specific is required.  Do NOT donate when
+        the same x is applied repeatedly (e.g. ``time_fn`` loops).
+
+        Mesh-planned operators place and jit internally (the shard_map
+        program is already persistent); for those the bound runner is
+        returned as-is.
+        """
+        if self.mesh is not None:
+            if not donate_rhs:
+                return self._run  # already a persistent bound runner
+            key = ("mesh", True)
+            fn = self._aot.get(key)
+            if fn is None:
+                fn = self._aot[key] = runner(
+                    self.a, self.plan.candidate, self._prep, k=self.plan.k,
+                    mesh=self.mesh, axis=self.axis, donate_rhs=True,
+                )
+            return fn
+        key = bool(donate_rhs)
+        fn = self._aot.get(key)
+        if fn is None:
+            from repro.runtime.executable import aot_compile
+
+            n = self.shape[1]
+            shape = (n,) if self.plan.k == 1 else (n, self.plan.k)
+            run = self._run
+            fn = self._aot[key] = aot_compile(
+                lambda x: run(x),
+                jax.ShapeDtypeStruct(shape, jnp.float32),
+                donate_argnums=(0,) if donate_rhs else (),
+            )
+        return fn
+
     @classmethod
     def from_candidate(
-        cls, a: CSRMatrix, cand: Candidate, *, k: int | None = None
+        cls, a: CSRMatrix, cand: Candidate, *, k: int | None = None,
+        donate_rhs: bool = False,
     ) -> "SparseOperator":
         """Build with a forced candidate — no search, no cache.
 
         Benchmarks use this to pin each fixed configuration (e.g. Fig 4's
         scalar tier, Table 2's block shapes) while still going through the
         facade's prepare + dispatch path.  k picks the SpMM path as in
-        ``build``.
+        ``build``.  ``donate_rhs=True`` pre-lowers the pinned candidate into
+        a donation-enabled persistent executable (``op.aot`` with the same
+        flag) so a pin is serving-ready without a second lowering step.
         """
         kk = 1 if k is None else int(k)
         plan = Plan(
@@ -447,7 +533,10 @@ class SparseOperator:
             backend=jax.default_backend(),
             scale=[int(a.shape[0]), int(a.shape[1]), int(a.nnz)],
         )
-        return cls(a, plan, prepare_cached(a, cand), from_cache=False)
+        op = cls(a, plan, prepare_cached(a, cand), from_cache=False)
+        if donate_rhs:
+            op.aot(donate_rhs=True)  # pre-lower the donation-enabled exec
+        return op
 
     @classmethod
     def build_multi(

@@ -20,6 +20,7 @@ miss and the caller re-searches.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 import json
@@ -27,6 +28,11 @@ import os
 import tempfile
 from pathlib import Path
 from typing import Any, Iterable
+
+try:  # POSIX advisory locks for the shared on-disk cache (see PlanCache.put)
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX: fall back to merge-only
+    fcntl = None
 
 import numpy as np
 
@@ -68,6 +74,11 @@ class Plan:
     k: int = 1  # dense-operand width (1 for spmv)
     backend: str = ""  # jax backend the timings were taken on ("" = unknown)
     scale: list = dataclasses.field(default_factory=list)  # [m, n, nnz]
+    # Search-cost bookkeeping: survivors abandoned by candidate racing (their
+    # first timed rep already exceeded RACE_FACTOR x the best median), i.e.
+    # timed once instead of the full rep count.  Audit-only — it never enters
+    # cache matching, so the field is schema-additive (no version bump).
+    n_raced: int = 0
     # Device-mesh topology the plan was measured on ([] = single device).
     # A collective-schedule plan tuned at one shard count is meaningless at
     # another — the allgather/ring crossover moves with P — so a topology
@@ -187,30 +198,55 @@ class PlanCache:
             return None
         return plan
 
+    @contextlib.contextmanager
+    def _write_lock(self):
+        """Exclusive advisory lock over the cache file's sidecar ``.lock``.
+
+        Merge-then-replace alone leaves a read→replace window in which a
+        second engine tuning the same (or another) matrix can persist a plan
+        that our replace then clobbers.  Holding the lock across the whole
+        read-merge-write-replace closes that window for every cooperating
+        process; on platforms without fcntl the merge-only behavior remains
+        (last replace wins ties, nothing corrupts).
+        """
+        if fcntl is None or self.path is None:
+            yield
+            return
+        lock_path = self.path.with_name(self.path.name + ".lock")
+        with open(lock_path, "w") as lock_f:
+            fcntl.flock(lock_f, fcntl.LOCK_EX)
+            try:
+                yield
+            finally:
+                fcntl.flock(lock_f, fcntl.LOCK_UN)
+
     def put(self, plan: Plan) -> None:
         key = self._key(plan.fingerprint, plan.kind, plan.k, plan.mesh_shape)
         self._plans[key] = plan.to_json()
         if self.path is not None:
             self.path.parent.mkdir(parents=True, exist_ok=True)
-            # Merge-then-replace so concurrent processes sharing the file
-            # don't clobber plans persisted since our load (ours win ties).
+            # Merge-then-replace, under an advisory lock, so concurrent
+            # processes sharing the file don't clobber plans persisted since
+            # our load (ours win ties).  The write itself is an atomic
+            # tmp-file + os.replace — a reader never observes a torn file.
             # Stale-version entries on disk are dropped, not carried along.
-            try:
-                on_disk = self._current(json.loads(self.path.read_text()))
-                self._plans = {**on_disk, **self._plans}
-            except (FileNotFoundError, json.JSONDecodeError, OSError):
-                pass
-            fd, tmp = tempfile.mkstemp(
-                dir=self.path.parent, prefix=self.path.name, suffix=".tmp"
-            )
-            try:
-                with os.fdopen(fd, "w") as f:
-                    json.dump(self._plans, f, indent=1, sort_keys=True)
-                os.replace(tmp, self.path)
-            except BaseException:
-                if os.path.exists(tmp):
-                    os.unlink(tmp)
-                raise
+            with self._write_lock():
+                try:
+                    on_disk = self._current(json.loads(self.path.read_text()))
+                    self._plans = {**on_disk, **self._plans}
+                except (FileNotFoundError, json.JSONDecodeError, OSError):
+                    pass
+                fd, tmp = tempfile.mkstemp(
+                    dir=self.path.parent, prefix=self.path.name, suffix=".tmp"
+                )
+                try:
+                    with os.fdopen(fd, "w") as f:
+                        json.dump(self._plans, f, indent=1, sort_keys=True)
+                    os.replace(tmp, self.path)
+                except BaseException:
+                    if os.path.exists(tmp):
+                        os.unlink(tmp)
+                    raise
 
 
 _default: PlanCache | None = None

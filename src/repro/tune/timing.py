@@ -16,16 +16,31 @@ between near-tied candidates):
   counts of every call: callers ask for what their budget affords, a noisy
   CI machine exports ``REPRO_TUNE_REPS=25`` and every measurement in the
   process — search and benchmarks alike — gets at least that many reps.
+
+Candidate racing (``abort_above=``): the measured search passes the running
+best median scaled by :data:`RACE_FACTOR`, and a candidate whose *first*
+timed rep exceeds that bound — confirmed by one more rep, so a lone
+scheduler blip cannot discard the true best — is abandoned (``inf``
+returned) without burning the remaining reps.  Compilation cannot trigger
+an abort — racing forces at least one warmup rep — and a candidate that is
+not abandoned still runs its full (env-floored) rep count, so the floors
+only ever apply to measurements that complete.
 """
 from __future__ import annotations
 
+import math
 import os
 import time
 
 import jax
 import numpy as np
 
-__all__ = ["WARMUP", "TIMED", "time_fn"]
+__all__ = ["WARMUP", "TIMED", "RACE_FACTOR", "time_fn"]
+
+# A candidate whose first steady-state rep is already this many times the
+# current best median cannot plausibly win (the median would need the other
+# reps to be negative); abandoning it there cuts cold-start search latency.
+RACE_FACTOR = 3.0
 
 # Paper §4 uses 70 runs / average of the last 60; scaled down for the CPU
 # container.  The autotuner passes smaller counts still (search-time budget).
@@ -46,17 +61,35 @@ def _floor_from_env(name: str, value: int) -> int:
         return value
 
 
-def time_fn(fn, *args, warmup: int = WARMUP, timed: int = TIMED) -> float:
+def time_fn(
+    fn,
+    *args,
+    warmup: int = WARMUP,
+    timed: int = TIMED,
+    abort_above: float | None = None,
+) -> float:
     """Median wall time (seconds) over ``timed`` runs after ``warmup``.
 
     Warmup runs are discarded (compilation lands in the first); the env
     floors above can raise both counts process-wide.  A floored ``timed``
     also forces ``warmup >= 1`` so the median never includes a compile.
+
+    ``abort_above`` enables candidate racing: a breach of the bound by the
+    *first* timed rep triggers ONE confirmation rep, and ``inf`` is
+    returned — the remaining reps never run — only if both exceed the
+    bound (``min`` of two is robust to a single scheduler preemption,
+    which can only make a rep slower, never faster; a lone noisy sample
+    must not permanently discard the true best candidate into the
+    persistent plan cache).  Racing forces ``warmup >= 1`` so a compile
+    can never trigger the abort; a candidate that survives still completes
+    the full floored rep count.
     """
     timed_floored = _floor_from_env(_ENV_REPS, max(int(timed), 1))
     if timed_floored > timed:  # env raised reps: never time a cold function
         warmup = max(warmup, 1)
     timed = timed_floored
+    if abort_above is not None:  # the abort must see a steady-state rep
+        warmup = max(warmup, 1)
     warmup = _floor_from_env(_ENV_WARMUP, int(warmup))
     out = None
     for _ in range(warmup):
@@ -69,4 +102,12 @@ def time_fn(fn, *args, warmup: int = WARMUP, timed: int = TIMED) -> float:
         out = fn(*args)
         jax.block_until_ready(out)
         times.append(time.perf_counter() - t0)
+        if abort_above is not None and len(times) == 1 and times[0] > abort_above:
+            t0 = time.perf_counter()
+            out = fn(*args)
+            jax.block_until_ready(out)
+            confirm = time.perf_counter() - t0
+            if confirm > abort_above:
+                return math.inf
+            times.append(confirm)  # breach was a blip: keep measuring
     return float(np.median(times))
