@@ -401,3 +401,124 @@ def test_plan_version_4_drops_v3_entries_and_rebuilds(tmp_path):
     assert all(e.get("version") == 4 for e in on_disk.values())
     # Restarted process reloads the rebuilt table without searching.
     assert SparseOperator.build(a, cache=PlanCache(path)).from_cache
+
+
+# ---------------------------------------------------------------------------
+# PR 5: candidate racing, plan-cache write safety, persistent executables
+# ---------------------------------------------------------------------------
+def test_time_fn_abort_above_races_out_slow_candidates():
+    """Satellite: a candidate whose FIRST timed rep exceeds the bound is
+    abandoned after one confirmation rep (inf, no further reps); a blip on
+    the first rep alone does NOT abandon; a surviving candidate completes
+    its full rep count, and racing forces a warmup so compile time can
+    never trigger the abort."""
+    import math
+    import time as _time
+
+    calls = []
+
+    def slow():
+        calls.append(1)
+        _time.sleep(0.01)
+
+    t = time_fn(slow, warmup=0, timed=5, abort_above=1e-6)
+    assert math.isinf(t)
+    # 1 forced warmup + 1 timed rep + 1 confirmation, 4 reps saved.
+    assert len(calls) == 3
+    calls.clear()
+    t = time_fn(slow, warmup=0, timed=5, abort_above=1e9)
+    assert math.isfinite(t) and len(calls) == 6  # survivor runs them all
+    # A single slow blip does not abandon: first rep breaches, the
+    # confirmation rep does not -> the candidate keeps measuring.
+    calls.clear()
+    # warmup rep, then a breaching first timed rep, then clean reps.
+    durations = iter([0.0, 0.02] + [0.0] * 9)
+
+    def blip():
+        calls.append(1)
+        _time.sleep(next(durations))
+
+    t = time_fn(blip, warmup=0, timed=4, abort_above=5e-3)
+    assert math.isfinite(t)  # survived the blip
+    assert len(calls) == 6  # warmup + blip + confirmation + 3 further reps
+
+
+def test_build_races_out_slow_candidates_on_suite_matrix():
+    """Acceptance: cold-start build on a suite matrix abandons at least one
+    survivor by racing (pruned-by-racing > 0), and the winner matches the
+    un-raced search."""
+    import math
+
+    a = generate("cant", scale=1 / 256)
+    raced = SparseOperator.build(a, cache=PlanCache(), warmup=0, timed=3,
+                                 prune_factor=1e9, force_search=True)
+    assert raced.plan.n_raced > 0  # cold-start search latency actually cut
+    assert sum(math.isinf(t) for t in raced.measurements.values()) \
+        == raced.plan.n_raced
+    # The winner is a completed (finite) measurement — racing can only
+    # abandon candidates at least RACE_FACTOR x slower than a finished one,
+    # so the returned plan always carries a real median.
+    assert math.isfinite(raced.plan.measured_s)
+    assert raced.measurements[raced.plan.candidate.key()] == min(
+        t for t in raced.measurements.values() if math.isfinite(t)
+    )
+    full = SparseOperator.build(a, cache=PlanCache(), warmup=0, timed=3,
+                                prune_factor=1e9, force_search=True,
+                                race=False)
+    assert full.plan.n_raced == 0  # opt-out really disables racing
+    assert all(math.isfinite(t) for t in full.measurements.values())
+
+
+def test_plan_cache_concurrent_puts_do_not_clobber(tmp_path):
+    """Satellite: two engines sharing the on-disk cache persist through the
+    locked merge-then-replace — a second cache's put never clobbers a plan
+    the first persisted after the second one loaded."""
+    from repro.tune.plan import Plan
+
+    path = tmp_path / "plans.json"
+
+    def plan_for(fp, kind="spmv", k=1):
+        return Plan(fingerprint=fp, kind=kind, fmt="csr", impl="vector",
+                    params={}, est_cost=1.0, measured_s=1e-4,
+                    n_candidates=1, n_measured=1, k=k, backend="cpu",
+                    scale=[4, 4, 4])
+
+    c1 = PlanCache(path)
+    c2 = PlanCache(path)  # loaded BEFORE c1 persists anything (empty view)
+    c1.put(plan_for("aaaa"))
+    c2.put(plan_for("bbbb"))  # merge-on-put must pick up c1's entry
+    reread = PlanCache(path)
+    assert reread.get("aaaa", "spmv", 1) is not None
+    assert reread.get("bbbb", "spmv", 1) is not None
+    # Interleaved writes in the other direction survive too.
+    c1.put(plan_for("cccc"))
+    reread = PlanCache(path)
+    assert {p for p in ("aaaa", "bbbb", "cccc")
+            if reread.get(p, "spmv", 1) is not None} == {"aaaa", "bbbb", "cccc"}
+    # The sidecar lock is left behind but never read as cache content.
+    assert (tmp_path / "plans.json.lock").exists()
+
+
+def test_aot_executable_matches_dispatch_and_supports_donation():
+    """SparseOperator.aot lowers once to a persistent executable that agrees
+    bitwise with the facade dispatch; donate_rhs consumes the operand."""
+    d, a = small_csr(seed=31)
+    op = SparseOperator.build(a, cache=PlanCache(), warmup=0, timed=1)
+    x = jnp.asarray(np.random.default_rng(32)
+                    .standard_normal(a.shape[1]).astype(np.float32))
+    fn = op.aot()
+    assert fn is op.aot()  # lowered once, cached
+    assert np.array_equal(np.asarray(fn(x)), np.asarray(op @ x))
+    # k>1 plan: the executable takes the (n, k) slab.
+    op4 = SparseOperator.build(a, k=4, cache=PlanCache(), warmup=0, timed=1)
+    X = jnp.asarray(np.random.default_rng(33)
+                    .standard_normal((a.shape[1], 4)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(op4.aot()(X)),
+                               np.asarray(op4 @ X), atol=0)
+    # Donation-aware pin: the executable is pre-lowered and the donated
+    # operand is consumed (deleted) after the call on backends that alias.
+    cand = op4.plan.candidate
+    opd = SparseOperator.from_candidate(a, cand, k=4, donate_rhs=True)
+    Xd = jnp.asarray(np.asarray(X))
+    y = opd.aot(donate_rhs=True)(Xd)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(op4 @ X), atol=1e-6)
