@@ -1,0 +1,243 @@
+"""Fused solver loop vs dispatch-per-iteration: iterations/second.
+
+Not a figure from the paper — it closes the paper's amortization argument
+over *iteration* overhead: the solvers that motivate SpMV (§5 cites CG and
+eigensolver workloads) run the kernel hundreds of times with the operand
+produced and consumed on device between steps.  A host-side loop pays a
+dispatch plus a device->host convergence transfer per iteration; the fused
+runtime (``runtime.solver``) chains the same step arithmetic with
+``lax.while_loop`` and checks convergence on device, so a whole solve is
+ONE launch.  Per SPD suite matrix the row reports:
+
+  iters_to_tol   CG iterations to 1e-5 with ON-DEVICE convergence
+                 (identical for both paths by construction — they share
+                 the step closure; asserted, with matching solutions)
+  fused_ms       one whole-solve launch at the FIXED iteration budget
+                 (tol<0, ``TIMED_ITERS`` iterations), end to end —
+                 including the final x / residual / count transfer, all
+                 the host ever sees
+  host_ms        the dispatch-per-iteration loop at the same budget: the
+                 same tuned solver-step plan behind a warmed jit call,
+                 plus the per-iteration ``float(rs)`` convergence transfer
+  fused_ips / host_ips
+                 iterations per second for each path
+  ratio          fused_ips / host_ips — the amortization factor
+
+The rate is measured at a fixed budget because the well-conditioned SPD
+suite systems converge in under ten iterations — too few for EITHER path's
+fixed launch cost to amortize, which would make the row a launch-latency
+comparison rather than the per-iteration rate the solvers that motivate
+this runtime (hundreds of iterations) actually see.  The tol-driven solve
+is still exercised and asserted (on-device convergence, reference-matching
+solution) before any timing.
+
+The gated claim (``--smoke`` only): fused >= 2x iterations/second vs the
+dispatch-per-iteration baseline on at least 3 suite matrices, with the
+fused path's convergence decided on device and both solutions equal to
+1e-5.  Smoke scale is where the claim is crisp: iterations are ~100us so
+per-iteration dispatch overhead IS the signal.  At full scale the kernel
+dominates each iteration and the rows report without gating.
+
+A block power iteration row per matrix rides along (informational, k=8
+SpMM plan) to show the amortization holds for the eigensolver shape too.
+
+``--json PATH`` emits machine-readable ``BENCH_solver.json`` so CI tracks
+the iterations/second trajectory.
+
+Run standalone (``--smoke`` shrinks scale for CI):
+
+  PYTHONPATH=src python -m benchmarks.fig17_solver [--smoke] [--json F]
+"""
+import json
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.spmv import spd_shift
+from repro.runtime.solver import (
+    SparseSolver,
+    block_power_host_loop,
+    cg_host_loop,
+)
+from repro.tune import PlanCache
+
+from .common import row, suite
+
+MATRICES = ("cant", "scircuit", "pdb1HYS", "shallow_water1")
+SCALE = 1 / 64
+TOL = 1e-5
+MAXITER = 400
+TIMED_ITERS = 128  # fixed budget for the rate rows (tol<0: runs to cap)
+POWER_K = 8
+POWER_TIMED_ITERS = 24
+REPEATS = 7  # interleaved best-of rounds: min is robust to scheduler noise
+
+
+def _time_once(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def _measure_paths(paths: dict) -> dict:
+    """Best-of-REPEATS per path, interleaved round-robin (fig15 discipline):
+    a slow phase of the machine hits all paths alike instead of biasing
+    whichever one happened to run during it."""
+    best = {name: float("inf") for name in paths}
+    for _ in range(REPEATS):
+        for name, fn in paths.items():
+            best[name] = min(best[name], _time_once(fn))
+    return best
+
+
+def main(lines: list, *, smoke: bool = False, json_path: str | None = None) -> None:
+    scale = 1 / 256 if smoke else SCALE
+    mats = {name: spd_shift(suite(scale)[name]) for name in MATRICES}
+    rng = np.random.default_rng(0)
+    report: dict = {}
+    wins: dict[str, bool] = {}
+    measured: dict = {}  # name -> (paths, best, meta)
+    with tempfile.TemporaryDirectory() as td:
+        for name, a in mats.items():
+            cache = PlanCache(Path(td) / f"{name}.json")
+            s = SparseSolver(a, cache=cache, warmup=1, timed=3)
+            b = rng.standard_normal(a.shape[0]).astype(np.float32)
+            v0 = rng.standard_normal((a.shape[0], POWER_K)).astype(np.float32)
+            matvec = s.op(1)._run  # the SAME tuned plan both loops dispatch
+            matmat = s.op(POWER_K)._run
+
+            # The tol-driven solve first — the functionality under test:
+            # device-decided convergence, identical iteration counts
+            # (shared step closure), solutions matching each other.
+            fused = s.cg(b, tol=TOL, maxiter=MAXITER)
+            host = cg_host_loop(matvec, b, tol=TOL, maxiter=MAXITER)
+            assert fused.converged and host.converged, (
+                f"{name}: cg did not converge "
+                f"(fused={fused.residual}, host={host.residual})")
+            assert fused.iterations == host.iterations, (
+                f"{name}: iteration counts diverged "
+                f"({fused.iterations} vs {host.iterations})")
+            np.testing.assert_allclose(
+                np.asarray(fused.x), np.asarray(host.x), atol=1e-5,
+                err_msg=f"{name}: fused and host-loop solutions differ")
+
+            # Warm the fixed-budget programs outside the timed window and
+            # pin that both paths run exactly the budget.
+            fb = s.cg(b, tol=-1.0, maxiter=TIMED_ITERS)
+            hb = cg_host_loop(matvec, b, tol=-1.0, maxiter=TIMED_ITERS)
+            assert fb.iterations == hb.iterations == TIMED_ITERS, name
+            fp_ = s.block_power(
+                POWER_K, tol=-1.0, maxiter=POWER_TIMED_ITERS, v0=v0)
+            hp_ = block_power_host_loop(
+                matmat, v0, tol=-1.0, maxiter=POWER_TIMED_ITERS)
+            assert fp_.iterations == hp_.iterations == POWER_TIMED_ITERS, name
+
+            paths = {
+                "fused": lambda _s=s, _b=b:
+                    _s.cg(_b, tol=-1.0, maxiter=TIMED_ITERS),
+                "host": lambda _m=matvec, _b=b:
+                    cg_host_loop(_m, _b, tol=-1.0, maxiter=TIMED_ITERS),
+                "fused_power": lambda _s=s, _v=v0:
+                    _s.block_power(POWER_K, tol=-1.0,
+                                   maxiter=POWER_TIMED_ITERS, v0=_v),
+                "host_power": lambda _m=matmat, _v=v0:
+                    block_power_host_loop(_m, _v, tol=-1.0,
+                                          maxiter=POWER_TIMED_ITERS),
+            }
+            measured[name] = (
+                paths,
+                _measure_paths(paths),
+                {"iters_to_tol": fused.iterations,
+                 "plan": fused.plan, "plan_power": fp_.plan},
+            )
+
+        def ratio_of(best, meta):
+            # Equal iteration counts, so the iterations/sec ratio is the
+            # time ratio; keep both forms for the report.
+            return best["host"] / max(best["fused"], 1e-9)
+
+        # Per-path minima only sharpen with more rounds: while the smoke
+        # gate would fail, re-measure the losing matrices and min-merge
+        # (fig15's retry discipline — noise recovers, regressions stay).
+        for _retry in range(2):
+            if not smoke or sum(
+                ratio_of(best, meta) >= 2.0
+                for _, best, meta in measured.values()
+            ) >= 3:
+                break
+            for name, (paths, best, _meta) in measured.items():
+                if ratio_of(best, _meta) >= 2.0:
+                    continue
+                again = _measure_paths(paths)
+                best.update({p: min(best[p], again[p]) for p in again})
+
+        for name, (paths, best, meta) in measured.items():
+            fused_ips = TIMED_ITERS / max(best["fused"], 1e-9)
+            host_ips = TIMED_ITERS / max(best["host"], 1e-9)
+            ratio = ratio_of(best, meta)
+            p_ratio = best["host_power"] / max(best["fused_power"], 1e-9)
+            wins[name] = ratio >= 2.0
+            report[name] = {
+                "iters_to_tol": meta["iters_to_tol"],
+                "timed_iters": TIMED_ITERS,
+                "fused_ms": round(best["fused"] * 1e3, 3),
+                "host_ms": round(best["host"] * 1e3, 3),
+                "fused_ips": round(fused_ips, 1),
+                "host_ips": round(host_ips, 1),
+                "ratio": round(ratio, 2),
+                "plan": meta["plan"],
+                "power_timed_iters": POWER_TIMED_ITERS,
+                "power_fused_ms": round(best["fused_power"] * 1e3, 3),
+                "power_host_ms": round(best["host_power"] * 1e3, 3),
+                "power_ratio": round(p_ratio, 2),
+                "power_plan": meta["plan_power"],
+            }
+            lines.append(row(
+                f"fig17_{name}_cg", best["fused"],
+                f"iters={TIMED_ITERS};"
+                f"iters_to_tol={meta['iters_to_tol']};"
+                f"fused_ms={best['fused'] * 1e3:.2f};"
+                f"host_ms={best['host'] * 1e3:.2f};"
+                f"fused_ips={fused_ips:.0f};"
+                f"host_ips={host_ips:.0f};"
+                f"ratio={ratio:.2f};"
+                f"plan={meta['plan']}"))
+            lines.append(row(
+                f"fig17_{name}_power", best["fused_power"],
+                f"iters={POWER_TIMED_ITERS};"
+                f"fused_ms={best['fused_power'] * 1e3:.2f};"
+                f"host_ms={best['host_power'] * 1e3:.2f};"
+                f"ratio={p_ratio:.2f};"
+                f"plan={meta['plan_power']}"))
+
+    if json_path:  # written before the assert: CI keeps the trajectory
+        Path(json_path).write_text(json.dumps(report, indent=1, sort_keys=True))
+    n_win = sum(wins.values())
+    if smoke:
+        # Gated at smoke scale only: iterations there are ~100us, so the
+        # per-iteration dispatch + convergence transfer IS the measured
+        # signal.  At full scale the ms-scale kernel dominates both paths
+        # and the ratio is reported without gating.
+        assert n_win >= 3, (
+            f"fused solver >= 2x iterations/sec on only {n_win}/{len(mats)} "
+            f"matrices ({ {n: report[n]['ratio'] for n in report} })"
+        )
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small scale for CI")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write per-matrix fused/host iterations-per-"
+                         "second to this JSON file (CI perf tracking)")
+    args = ap.parse_args()
+    lines = ["name,s_per_solve,derived"]
+    main(lines, smoke=args.smoke, json_path=args.json)
+    print("\n".join(lines))
+    print("# fig17 ok", file=sys.stderr)

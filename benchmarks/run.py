@@ -31,6 +31,7 @@ def main() -> None:
         fig13_mesh_engine,
         fig14_imbalance,
         fig15_dispatch,
+        fig17_solver,
         table2_register_blocking,
     )
 
@@ -50,6 +51,7 @@ def main() -> None:
         "fig13": fig13_mesh_engine,  # shard sweep adapts to visible devices
         "fig14": fig14_imbalance,
         "fig15": fig15_dispatch,
+        "fig17": fig17_solver,
     }
     only = set(args.only.split(",")) if args.only else None
     lines: list = ["name,us_per_call,derived"]

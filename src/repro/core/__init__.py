@@ -24,6 +24,7 @@ from .metrics import (  # noqa: F401
 )
 from .reorder import degree_order, random_order, rcm  # noqa: F401
 from .spmv import (  # noqa: F401
+    spd_shift,
     spmm,
     spmm_bcsr_dense,
     spmm_csr,
@@ -32,4 +33,5 @@ from .spmv import (  # noqa: F401
     spmv_csr,
     spmv_csr_scalar,
     spmv_sell,
+    symmetrize,
 )

@@ -34,7 +34,7 @@ from .spmv import _rows_from_indptr
 
 __all__ = ["allgather_spmm", "ring_spmm", "local_spmm", "stacked_spmm",
            "assemble_rows", "SCHEDULES", "build_mesh_operand",
-           "place_mesh_operand", "mesh_spmm_runner"]
+           "place_mesh_operand", "mesh_spmm_runner", "psum_dot_runner"]
 
 SCHEDULES = ("allgather", "ring")
 
@@ -227,6 +227,47 @@ def place_mesh_operand(prep: dict[str, Any], mesh, axis: str) -> dict[str, Any]:
         for key, v in prep["arrays"].items()
     }
     return {**prep, "placed": placed}
+
+
+def psum_dot_runner(mesh, axis: str, n: int):
+    """Bind ``dot(u, v) -> scalar`` as a shard_map + ``lax.psum`` program.
+
+    The fused solver runtime's mesh path needs its dot-product reductions
+    (rᵀr, pᵀAp, Rayleigh quotients) to run as collectives on the SAME mesh
+    axis the tuned SpMV schedule shards over — a host-side ``jnp.vdot`` on
+    a sharded vector would leave the reduction layout to late GSPMD
+    propagation instead of the mesh schedule the plan was measured on.
+    Vectors are zero-padded to a multiple of the shard count (pad
+    contributes 0 to the sum), each shard reduces its slab locally, and one
+    ``psum`` over ``axis`` replicates the scalar.
+
+    ``u``/``v`` may be (n,) or (n, k); (n, k) reduces per column -> (k,)
+    (the block solvers' per-vector Rayleigh quotients in one collective).
+    """
+    P_ = int(mesh.shape[axis])
+    n_pad = -(-int(n) // P_) * P_
+
+    @functools.partial(
+        _shard_map, mesh=mesh, in_specs=(P(axis), P(axis)), out_specs=P()
+    )
+    def reduce_(ul, vl):
+        return jax.lax.psum(jnp.sum(ul * vl, axis=0), axis)
+
+    @jax.jit
+    def dot(u, v):
+        u2 = u[:, None] if u.ndim == 1 else u
+        v2 = v[:, None] if v.ndim == 1 else v
+        if n_pad > u2.shape[0]:
+            pad = jnp.zeros((n_pad - u2.shape[0], u2.shape[1]), u2.dtype)
+            u2 = jnp.concatenate([u2, pad], axis=0)
+            v2 = jnp.concatenate(
+                [v2, jnp.zeros((n_pad - v2.shape[0], v2.shape[1]), v2.dtype)],
+                axis=0,
+            )
+        out = reduce_(u2, v2)
+        return out[0] if u.ndim == 1 else out
+
+    return dot
 
 
 def mesh_spmm_runner(mesh, axis: str, prep: dict[str, Any],

@@ -41,6 +41,8 @@ __all__ = [
     "spmm_bcsr_dense",
     "spmv",
     "spmm",
+    "symmetrize",
+    "spd_shift",
 ]
 
 
@@ -205,6 +207,51 @@ def spmm_bcsr_dense(
     gathered = x_blocked[bcols]  # (n_blocks, bk, k)
     prods = jnp.einsum("bij,bjk->bik", blocks, gathered)
     return jax.ops.segment_sum(prods, brows, num_segments=n_block_rows)
+
+
+# ---------------------------------------------------------------------------
+# Solver-workload constructors (runtime/solver.py consumes these)
+#
+# The iterative solvers the paper motivates SpMV with (CG, Lanczos, LOBPCG)
+# assume symmetric / symmetric-positive-definite operators; the Table 1
+# suite matrices are general.  These two host-side helpers build the solver
+# workloads from any CSR so the example, the fig17 benchmark, and the
+# correctness tests construct them one way.
+# ---------------------------------------------------------------------------
+def symmetrize(a):
+    """(A + A^T) / 2 as a new CSRMatrix (host construction, duplicate-summed)."""
+    from .formats import csr_from_coo
+
+    rows = np.repeat(np.arange(a.shape[0]), np.diff(a.indptr))
+    r = np.concatenate([rows, a.indices])
+    c = np.concatenate([a.indices, rows])
+    v = np.concatenate([a.data, a.data]) * 0.5
+    return csr_from_coo(a.shape, r, c, v)
+
+
+def spd_shift(a, margin: float = 1.0):
+    """A symmetric positive-definite operator with ``a``'s pattern.
+
+    Symmetrizes, then adds ``(max off-diagonal |row sum| + margin) * I`` —
+    strict diagonal dominance with positive diagonal, hence SPD (Gershgorin).
+    The CG correctness suite and fig17 solve against these systems; the
+    conditioning is benign by construction so convergence behavior probes
+    the *runtime*, not the matrix.
+    """
+    from .formats import csr_from_coo
+
+    s = symmetrize(a)
+    rows = np.repeat(np.arange(s.shape[0]), np.diff(s.indptr))
+    off = rows != s.indices
+    row_abs = np.zeros(s.shape[0], s.data.dtype)
+    np.add.at(row_abs, rows[off], np.abs(s.data[off]))
+    shift = np.float32(row_abs.max(initial=0.0) + margin)
+    r = np.concatenate([rows, np.arange(s.shape[0])])
+    c = np.concatenate([s.indices, np.arange(s.shape[0])])
+    v = np.concatenate(
+        [np.where(off, s.data, np.abs(s.data)), np.full(s.shape[0], shift, s.data.dtype)]
+    )
+    return csr_from_coo(s.shape, r, c, v)
 
 
 # ---------------------------------------------------------------------------

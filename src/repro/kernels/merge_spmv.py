@@ -59,10 +59,23 @@ def merge_prepare(a, chunk: int = DEFAULT_CHUNK) -> dict[str, Any]:
     to ``n_chunks * chunk`` (padding gathers x[0] with value 0.0 — harmless),
     ``start``/``end`` are the per-row prefix-sum gather offsets.  ``chunk``
     and ``n_chunks`` ride along as static python ints.
+
+    The gather offsets are int32 (they index the prefix-sum table P, whose
+    length is the padded nnz): a matrix with nnz >= 2**31 cannot be
+    represented by this tier and is rejected here — loudly, because the
+    ``astype(np.int32)`` below would otherwise WRAP the large indptr tails
+    to negative offsets and the kernel would return silently wrong values
+    for every late row.
     """
     chunk = max(1, int(chunk))
     nnz = a.nnz
     n_chunks = max(1, -(-nnz // chunk))
+    if int(a.indptr[-1]) >= 2**31 or n_chunks * chunk >= 2**31:
+        raise OverflowError(
+            f"merge tier: nnz={int(a.indptr[-1])} (padded {n_chunks * chunk}) "
+            "overflows the int32 prefix-sum offsets; this matrix needs the "
+            "CSR/SELL tiers (or row-partitioned shards each below 2**31 nnz)"
+        )
     pad = n_chunks * chunk - nnz
     indices = np.concatenate([a.indices, np.zeros(pad, a.indices.dtype)])
     data = np.concatenate([a.data, np.zeros(pad, a.data.dtype)])

@@ -66,6 +66,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import deque
 from typing import Any, Iterable, Sequence
 
@@ -201,6 +202,14 @@ class SparseEngine:
     (benchmark baseline).  Remaining keyword arguments
     (warmup/timed/force_search/include_reorder/...) pass through to
     :meth:`SparseOperator.build`.
+
+    **Dtype policy.** The engine serves float32 end to end (ring slots, pad
+    columns and every tuned kernel are f32).  A non-f32 ``submit()`` input
+    is cast to float32 — visibly: the first such cast warns (once per
+    engine), because a float64 operand silently losing half its mantissa
+    looks like a kernel accuracy bug from the caller's side.
+    ``strict_dtype=True`` turns the cast into a ``TypeError`` for callers
+    that would rather fail than lose precision.
     """
 
     def __init__(
@@ -215,6 +224,7 @@ class SparseEngine:
         max_wait_s: float | None = None,
         async_depth: int = 2,
         legacy_dispatch: bool = False,
+        strict_dtype: bool = False,
         **build_kwargs: Any,
     ):
         if not ks:
@@ -232,6 +242,8 @@ class SparseEngine:
         # dispatches can be in flight before a buffer must be reused.
         self.async_depth = max(0, min(int(async_depth), 2))
         self.legacy_dispatch = bool(legacy_dispatch)
+        self.strict_dtype = bool(strict_dtype)
+        self._dtype_warned = False  # the cast warning fires once per engine
         if mesh is not None:
             if n_shards > 1:
                 raise ValueError("mesh= and n_shards= are mutually exclusive")
@@ -283,13 +295,38 @@ class SparseEngine:
         return len(self._inflight)
 
     def submit(self, x: jax.Array) -> EngineRequest:
-        """Enqueue y = A @ x; returns a future filled in by a later step()."""
+        """Enqueue y = A @ x; returns a future filled in by a later step().
+
+        Non-float32 inputs are cast to f32 (ring slots and pads are f32) —
+        warning once per engine, or raising ``TypeError`` under
+        ``strict_dtype=True``.  See the class docstring's dtype policy.
+        """
         if not isinstance(x, jax.Array):  # asarray on a device array costs
-            x = jnp.asarray(x)            # ~20us — real vs serving rates
+            # Through numpy, NOT jnp: with x64 disabled jnp.asarray folds
+            # float64 to f32 before the dtype is ever observable, which is
+            # exactly the silent downcast this policy exists to surface.
+            x = np.asarray(x)
         if x.shape != (self.shape[1],):
             raise ValueError(f"expected x of shape ({self.shape[1]},), got {x.shape}")
-        if x.dtype != jnp.float32:  # ring slots (and pads) are f32
-            x = x.astype(jnp.float32)
+        if x.dtype != jnp.float32:
+            if self.strict_dtype:
+                raise TypeError(
+                    f"submit() got dtype {x.dtype}; this engine serves "
+                    "float32 and strict_dtype=True forbids the implicit cast"
+                )
+            if not self._dtype_warned:
+                self._dtype_warned = True
+                warnings.warn(
+                    f"SparseEngine.submit: casting {x.dtype} input to "
+                    "float32 (the engine's serving dtype) — submit float32 "
+                    "to avoid the cast, or build the engine with "
+                    "strict_dtype=True to make this an error; warning once "
+                    "per engine",
+                    stacklevel=2,
+                )
+            x = jnp.asarray(x, jnp.float32)
+        elif not isinstance(x, jax.Array):
+            x = jnp.asarray(x)
         req = EngineRequest(rid=self._rid, x=x, t_submit=time.perf_counter(),
                             _engine=self)
         self._rid += 1

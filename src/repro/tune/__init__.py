@@ -24,7 +24,13 @@ from .candidates import (
     split_reorder,
 )
 from .features import MatrixFeatures, extract
-from .operator import SparseOperator, prepare, prepare_cached, runner
+from .operator import (
+    SparseOperator,
+    prepare,
+    prepare_cached,
+    runner,
+    solver_step_probe,
+)
 from .plan import PLAN_VERSION, Plan, PlanCache, default_cache, fingerprint
 from .timing import TIMED, WARMUP, time_fn
 
@@ -56,6 +62,7 @@ __all__ = [
     "prune",
     "runner",
     "sell_padded_slots",
+    "solver_step_probe",
     "split_reorder",
     "time_fn",
 ]

@@ -48,6 +48,8 @@ __all__ = [
     "ROW_IMBALANCE_WEIGHT",
     "SCHEDULES",
     "RING_STEP_OVERHEAD_BYTES",
+    "SOLVER_STEP_AMORTIZE",
+    "SOLVER_VEC_PASSES",
 ]
 
 SELL_SIGMAS = (1, 64, 256)
@@ -90,6 +92,20 @@ RING_STEP_OVERHEAD_BYTES = 512 * 1024
 # before measurement (pruning keeps near-ties; the measured search decides).
 ROW_IMBALANCE_WEIGHT = 0.5
 ROW_IMBALANCE_CV_CAP = 4.0
+
+# Solver-step byte model (kind="solver_step"): inside a fused iterative
+# solver the operand x is PRODUCED and CONSUMED on device between
+# iterations — one lax.while_loop launch runs hundreds of steps — so the
+# fixed dispatch constant that dominates small-matrix SpMV estimates is
+# amortized over the whole solve.  That moves the crossover: candidates
+# that were near-tied behind OVERHEAD_BYTES now separate on their stream
+# bytes alone, which is why solver plans are tuned (and cached) as their
+# own kind instead of reusing the spmv/spmm winner.  The step's non-SpMV
+# traffic (axpys + dot reductions over the iteration vectors r/p/x/Ap)
+# adds ~SOLVER_VEC_PASSES full passes over an m-vector per step —
+# format-independent, but it keeps estimates honest against measurement.
+SOLVER_STEP_AMORTIZE = 64.0  # iterations sharing one launch (order, not fit)
+SOLVER_VEC_PASSES = 6
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,6 +154,7 @@ def enumerate_candidates(
     feats: MatrixFeatures,
     kind: str = "spmv",
     *,
+    k: int = 1,
     sigmas: Iterable[int] = SELL_SIGMAS,
     bcsr_blocks: Iterable[tuple[int, int]] = BCSR_BLOCKS,
     chunk_tiles: Iterable[int] = (8, 16),
@@ -157,12 +174,24 @@ def enumerate_candidates(
     row distribution, so it is what the search falls back on when
     ``nnz_row_cv`` is high.
 
+    ``kind="solver_step"`` (the fused iterative-solver runtime,
+    runtime/solver.py) enumerates the SpMV space at ``k == 1`` and the
+    SpMM space at block width ``k > 1`` — the candidate *kernels* are the
+    same, but the byte model and the measured probe differ (see
+    :func:`estimate_cost` ``fused=``), so solver plans are a separate
+    cache kind.  The scalar tier is excluded: a solver multiplies every
+    per-step cost by hundreds of iterations, and an unvectorized inner
+    loop can never recover.
+
     ``reorders`` (e.g. ``("rcm",)``) doubles the space with row/column
     permuted variants of every non-scalar candidate — the paper's §4.4
     densification folded into the search.  Square matrices only (RCM is
     defined on the symmetrized pattern); the scalar tier is skipped since
     reordering cannot rescue an unvectorized inner loop.
     """
+    if kind == "solver_step":
+        kind = "spmv" if int(k) == 1 else "spmm"
+        include_scalar = False
     cands: list[Candidate] = [make("csr", "vector")]
     cands.extend(make("merge", "scan", chunk=int(c)) for c in merge_chunks)
     if kind == "spmv":
@@ -278,11 +307,20 @@ def estimate_cost(
     val_bytes: int = 4,
     idx_bytes: int = 4,
     on_cpu: bool | None = None,
+    fused: bool = False,
 ) -> float:
     """Abstract cost (bytes x impl slowdown) of running this candidate.
 
     Only relative magnitudes matter: prune() compares candidates against the
     cheapest estimate for the same matrix.
+
+    ``fused=True`` estimates one *solver step* instead of one standalone
+    dispatch (kind="solver_step"): the operand is produced and consumed on
+    device inside a single ``lax.while_loop`` launch, so the fixed dispatch
+    constant is divided by :data:`SOLVER_STEP_AMORTIZE` and the step's
+    axpy/dot vector traffic (:data:`SOLVER_VEC_PASSES` m-vector passes) is
+    added.  Small matrices stop being overhead-bound under fusion, which
+    is exactly the crossover shift that makes solver plans their own kind.
     """
     if on_cpu is None:
         from repro.kernels.ops import on_cpu as _on_cpu
@@ -299,7 +337,7 @@ def estimate_cost(
         return (
             estimate_cost(
                 a, base, feats, k=k, val_bytes=val_bytes,
-                idx_bytes=idx_bytes, on_cpu=on_cpu,
+                idx_bytes=idx_bytes, on_cpu=on_cpu, fused=fused,
             )
             + perm_bytes
         )
@@ -376,7 +414,14 @@ def estimate_cost(
         slowdown = SCALAR_SLOWDOWN
     elif cand.impl == "pallas" and on_cpu:
         slowdown = INTERPRET_SLOWDOWN
-    return (float(bytes_) + OVERHEAD_BYTES) * slowdown
+    overhead = OVERHEAD_BYTES
+    if fused:
+        # One launch runs the whole solve: the dispatch constant amortizes
+        # over the iterations, and every step pays the axpy/dot reduction
+        # traffic on top of the kernel's streams.
+        overhead = OVERHEAD_BYTES / SOLVER_STEP_AMORTIZE
+        bytes_ = float(bytes_) + SOLVER_VEC_PASSES * m * k * val_bytes
+    return (float(bytes_) + overhead) * slowdown
 
 
 def prune(

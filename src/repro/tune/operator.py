@@ -49,7 +49,13 @@ from .features import MatrixFeatures, extract
 from .plan import Plan, PlanCache, default_cache, fingerprint
 from .timing import RACE_FACTOR, time_fn
 
-__all__ = ["SparseOperator", "prepare", "prepare_cached", "runner"]
+__all__ = [
+    "SparseOperator",
+    "prepare",
+    "prepare_cached",
+    "runner",
+    "solver_step_probe",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -172,6 +178,47 @@ def prepare_cached(
     else:
         _PREP_MEMO.move_to_end(key)
     return prep
+
+
+def solver_step_probe(run, k: int):
+    """Wrap a bound runner into the composite a solver step actually runs.
+
+    kind="solver_step" plans are timed on this probe instead of the bare
+    kernel: one y = A @ x plus the axpy updates and dot-product reductions
+    a CG / power step fuses around it, all in ONE jitted program — the same
+    shape of program ``runtime.solver`` lowers its ``lax.while_loop`` body
+    to.  The non-SpMV ops are format-independent, but timing them *with*
+    the kernel is the point: fusion changes which kernel wins (XLA can
+    overlap or fold the vector traffic differently per kernel), and the
+    dispatch overhead a standalone SpMV measurement is dominated by at
+    small sizes is exactly what the fused solver does not pay.
+
+    The orthogonalization a block step adds (QR at k > 1) is excluded: its
+    cost is identical across candidates and would only dilute separation.
+    """
+    if k == 1:
+
+        @jax.jit
+        def step(x):
+            y = run(x)
+            # CG-shaped traffic: two reductions + two axpys over m-vectors.
+            curve = jnp.vdot(x, y)
+            alpha = jnp.vdot(x, x) / jnp.where(curve == 0, 1.0, curve)
+            r = x - alpha * y
+            return r + alpha * x
+
+    else:
+
+        @jax.jit
+        def step(v):
+            w = run(v)
+            # Block-power-shaped traffic: per-column Rayleigh quotients
+            # (diag(V^T A V)) + the normalized update.
+            theta = jnp.sum(v * w, axis=0)
+            scale = jnp.linalg.norm(w, axis=0)
+            return w / jnp.where(scale == 0, 1.0, scale) + 0.0 * theta
+
+    return step
 
 
 def runner(
@@ -332,10 +379,22 @@ class SparseOperator:
         prep_cache: dict | None = None,
         seed: int = 0,
         race: bool = True,
+        solver_step: bool = False,
     ) -> "SparseOperator":
         """Autotune (or fetch the cached plan for) this matrix.
 
         k=None tunes SpMV; k=<width> tunes SpMM with a (n, k) operand.
+
+        ``solver_step=True`` tunes at the *solver-step* level instead
+        (kind="solver_step", the fused iterative-solver runtime's plans):
+        the same kernel candidates, but estimated with the fused byte model
+        (``estimate_cost(fused=True)`` — the dispatch constant amortizes
+        over a while_loop's iterations) and *measured on the solver-step
+        probe* (:func:`solver_step_probe`: SpMV + axpys + dot reductions in
+        one program) rather than the bare kernel.  The best format for one
+        standalone y = A @ x is not necessarily best when x is produced and
+        consumed on device between iterations; these plans are cached as
+        their own kind so neither table shadows the other.
         ``candidates`` overrides enumeration (pruning still applies);
         ``force_search`` ignores a cached plan and re-times;
         ``include_reorder`` adds RCM-permuted variants to the search space
@@ -360,6 +419,8 @@ class SparseOperator:
         schedule tuned for a different shard count.
         """
         kind = "spmv" if k is None else "spmm"
+        if solver_step:
+            kind = "solver_step"
         kk = 1 if k is None else int(k)
         fp = fingerprint(a)
         backend = jax.default_backend()
@@ -391,9 +452,13 @@ class SparseOperator:
             cands = enumerate_mesh_candidates(feats, mesh.shape[axis])
         else:
             cands = enumerate_candidates(
-                feats, kind, reorders=REORDER_METHODS if include_reorder else ()
+                feats, kind, k=kk,
+                reorders=REORDER_METHODS if include_reorder else (),
             )
-        costs = {c: estimate_cost(a, c, feats, k=kk) for c in cands}
+        costs = {
+            c: estimate_cost(a, c, feats, k=kk, fused=solver_step)
+            for c in cands
+        }
         survivors = prune(costs, factor=prune_factor)
 
         rng = np.random.default_rng(seed)
@@ -415,6 +480,8 @@ class SparseOperator:
             prep = prepare_cached(a, c, fp=fp, mesh=mesh, axis=axis,
                                   prep_cache=prep_cache)
             fn = runner(a, c, prep, k=kk, mesh=mesh, axis=axis)
+            if solver_step:  # time the fused composite, not the bare kernel
+                fn = solver_step_probe(fn, kk)
             abort = RACE_FACTOR * best[0] if (race and best is not None) else None
             t = time_fn(fn, x, warmup=warmup_eff, timed=timed, abort_above=abort)
             measurements[c.key()] = t

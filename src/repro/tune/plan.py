@@ -45,7 +45,11 @@ __all__ = ["PLAN_VERSION", "Plan", "PlanCache", "fingerprint", "default_cache"]
 # v4: the merge tier joined the candidate space and CSR prepared dicts carry
 # the hoisted row map — v3 plans were picked from a smaller space against a
 # slower baseline, so they are dropped and re-searched rather than served.
-PLAN_VERSION = 4
+# v5: the solver-step kind joined the space with a fused byte model (the
+# dispatch constant amortizes over a while_loop's iterations and axpy/dot
+# traffic enters the estimate), which moves the crossover pruning sees for
+# every kind sharing the model's constants — pre-v5 plans are re-searched.
+PLAN_VERSION = 5
 
 _ENV_CACHE = "REPRO_TUNE_CACHE"
 _DEFAULT_CACHE = "~/.cache/repro_tune/plans.json"

@@ -296,3 +296,47 @@ def test_batched_server_prefill_assignment():
         solo, _ = serve(1, [p])
         match = [r for r in batched if np.array_equal(r.prompt, p)]
         assert match[0].out == solo[0].out  # slot isolation: same greedy path
+
+
+# ---------------------------------------------------------------------------
+# PR 6: the submit() dtype policy (no more silent downcasts)
+# ---------------------------------------------------------------------------
+def test_submit_non_f32_warns_once_per_engine_and_casts():
+    import warnings
+
+    d, a = small(seed=30)
+    eng = engine(a)
+    x64 = np.linspace(-1.0, 1.0, a.shape[1])  # float64
+    assert x64.dtype == np.float64
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        r1 = eng.submit(x64)
+        r2 = eng.submit(x64)  # second cast: silent (once per engine)
+        r3 = eng.submit(x64.astype(np.float32))  # f32: never warns
+    msgs = [w for w in caught if "float32" in str(w.message)]
+    assert len(msgs) == 1, [str(w.message) for w in caught]
+    eng.drain()
+    ref = d @ x64.astype(np.float32)
+    for r in (r1, r2, r3):
+        assert r.y.dtype == jnp.float32
+        np.testing.assert_allclose(np.asarray(r.y), ref, atol=2e-3)
+    # A second engine gets its own one warning.
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        engine(a).submit(x64)
+    assert any("float32" in str(w.message) for w in caught)
+
+
+def test_submit_strict_dtype_raises_instead_of_casting():
+    import pytest
+
+    _, a = small(seed=31)
+    eng = engine(a, strict_dtype=True)
+    with pytest.raises(TypeError, match="float64"):
+        eng.submit(np.zeros(a.shape[1], np.float64))
+    with pytest.raises(TypeError, match="int32"):
+        eng.submit(np.zeros(a.shape[1], np.int32))
+    # Exact-dtype traffic is unaffected.
+    r = eng.submit(np.zeros(a.shape[1], np.float32))
+    eng.drain()
+    assert r.done and r.y.dtype == jnp.float32

@@ -245,3 +245,38 @@ def test_pathological_rows_every_candidate_matches_oracle(dist):
         np.testing.assert_allclose(
             got, d @ X, atol=5e-3, err_msg=f"{dist}: {cand.key()}"
         )
+
+
+def test_merge_prepare_rejects_int32_overflowing_nnz():
+    """Regression: indptr tails >= 2**31 used to WRAP through the int32
+    astype into negative gather offsets (silently wrong late rows).  The
+    guard must fire on a mocked indptr without allocating nnz-sized
+    arrays, and must also catch padded sizes that cross 2**31."""
+    import types
+
+    big = types.SimpleNamespace(
+        nnz=2**31,
+        indptr=np.array([0, 2**30, 2**31], np.int64),
+        indices=np.zeros(0, np.int32),
+        data=np.zeros(0, np.float32),
+        shape=(2, 2),
+    )
+    with pytest.raises(OverflowError, match="merge tier"):
+        merge_prepare(big, 4096)
+    # nnz just under the limit, but chunk padding crosses it: still rejected
+    # (the prefix table is padded-nnz long).
+    near = types.SimpleNamespace(
+        nnz=2**31 - 1,
+        indptr=np.array([0, 2**31 - 1], np.int64),
+        indices=np.zeros(0, np.int32),
+        data=np.zeros(0, np.float32),
+        shape=(1, 2),
+    )
+    with pytest.raises(OverflowError, match="merge tier"):
+        merge_prepare(near, 4096)
+    # Far below the limit nothing changes.
+    d = np.eye(3, dtype=np.float32)
+    prep = merge_prepare(csr_from_dense(d), 4096)
+    np.testing.assert_allclose(
+        np.asarray(merge_spmv(prep, jnp.ones(3, jnp.float32))), np.ones(3)
+    )

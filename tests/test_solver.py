@@ -1,0 +1,270 @@
+"""Fused solver runtime (PR 6): CG / Lanczos / block power correctness.
+
+Four claims under test, per the acceptance criteria:
+
+* CG solves SPD suite systems to the dense/direct reference, and does so
+  under EVERY candidate format the solver-step search can pick (the fused
+  while_loop body must be kernel-agnostic);
+* Lanczos and block power reproduce ``numpy.linalg.eigvalsh`` extremes;
+* the fused on-device loop retires after exactly the iterations the
+  dispatch-per-iteration host loop takes, with the same convergence flag
+  (same step arithmetic, different loop location);
+* a mesh-sharded CG (tuned collective schedule + psum reductions) equals
+  the single-device solution at 1e-5 on every mesh size the visible
+  device count can host.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import csr_from_dense, csr_to_dense, spd_shift, symmetrize
+from repro.data.suite import generate
+from repro.launch.mesh import make_spmm_mesh
+from repro.runtime.solver import (
+    SparseSolver,
+    block_power_host_loop,
+    cg_host_loop,
+    tridiag_eigvalsh,
+)
+from repro.tune import PlanCache, enumerate_candidates, extract
+
+MESH_SIZES = tuple(p for p in (1, 2, 4, 8) if p <= jax.device_count())
+
+SPD_SUITE = ("shallow_water1", "2cubes_sphere", "scircuit")
+
+
+def spd_problem(name, scale=1 / 256, seed=0):
+    """An SPD suite system (A, dense A, b) small enough to densify."""
+    a = spd_shift(generate(name, scale=scale))
+    rng = np.random.default_rng(seed)
+    b = rng.standard_normal(a.shape[0]).astype(np.float32)
+    return a, np.asarray(csr_to_dense(a), np.float64), b
+
+
+def solver(a, cache=None, **kw):
+    cache = cache if cache is not None else PlanCache()
+    return SparseSolver(a, cache=cache, warmup=0, timed=1, **kw)
+
+
+def random_spd(seed=0, n=200, density=0.03):
+    rng = np.random.default_rng(seed)
+    d = ((rng.random((n, n)) < density) * rng.standard_normal((n, n))).astype(
+        np.float32
+    )
+    return spd_shift(csr_from_dense(d))
+
+
+# ---------------------------------------------------------------------------
+# CG vs the direct reference
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", SPD_SUITE)
+def test_cg_matches_dense_reference_on_spd_suite(name):
+    a, dense, b = spd_problem(name)
+    res = solver(a).cg(b, tol=1e-6, maxiter=600)
+    assert res.converged, f"{name}: CG did not converge ({res.residual})"
+    x_ref = np.linalg.solve(dense, b.astype(np.float64))
+    err = np.abs(np.asarray(res.x, np.float64) - x_ref).max()
+    assert err / max(np.abs(x_ref).max(), 1e-30) < 1e-4, f"{name}: err {err}"
+    # The residual the device reported is the truth, not an estimate.
+    true_res = np.linalg.norm(dense @ np.asarray(res.x, np.float64) - b)
+    assert res.residual <= 2.0 * true_res + 1e-4
+    assert 0 < res.iterations <= 600
+
+
+def test_cg_correct_under_every_candidate_format():
+    """The fused step must be kernel-agnostic: pin each distinct format the
+    solver-step enumeration produces and check the SAME solve converges to
+    the dense reference under all of them."""
+    a = random_spd(seed=5)
+    dense = np.asarray(csr_to_dense(a), np.float64)
+    rng = np.random.default_rng(6)
+    b = rng.standard_normal(a.shape[0]).astype(np.float32)
+    x_ref = np.linalg.solve(dense, b.astype(np.float64))
+
+    by_fmt = {}
+    for c in enumerate_candidates(extract(a, k=1), "solver_step", k=1):
+        by_fmt.setdefault(c.fmt, c)  # one representative per format
+    assert len(by_fmt) >= 3, f"format sweep degenerated: {sorted(by_fmt)}"
+    for fmt, cand in sorted(by_fmt.items()):
+        res = solver(a, candidates=[cand]).cg(b, tol=1e-6, maxiter=600)
+        assert res.converged, f"{fmt}: no convergence ({res.residual})"
+        err = np.abs(np.asarray(res.x, np.float64) - x_ref).max()
+        assert err / np.abs(x_ref).max() < 1e-4, f"{fmt}: err {err}"
+        assert res.plan.startswith(fmt), res.plan
+
+
+def test_cg_scipy_reference_when_available():
+    scipy_sparse = pytest.importorskip("scipy.sparse")
+    from scipy.sparse.linalg import cg as scipy_cg
+
+    a, dense, b = spd_problem("shallow_water1")
+    sp = scipy_sparse.csr_matrix(
+        (a.data, a.indices, a.indptr), shape=a.shape
+    ).astype(np.float64)
+    x_sp, info = scipy_cg(sp, b.astype(np.float64), rtol=1e-6)
+    assert info == 0
+    res = solver(a).cg(b, tol=1e-6, maxiter=600)
+    assert res.converged
+    np.testing.assert_allclose(np.asarray(res.x), x_sp, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Eigensolvers vs numpy.linalg.eigvalsh
+# ---------------------------------------------------------------------------
+def test_lanczos_extreme_ritz_values_match_eigvalsh():
+    a = random_spd(seed=7)
+    w = np.linalg.eigvalsh(np.asarray(csr_to_dense(a), np.float64))
+    res = solver(a).lanczos(num_steps=80, seed=1)
+    assert res.iterations == 80 and res.alphas.shape == (80,)
+    # Lanczos nails the spectrum's extremes first.
+    assert abs(res.eigenvalues[-1] - w[-1]) / abs(w[-1]) < 1e-3
+    assert abs(res.eigenvalues[0] - w[0]) / abs(w[-1]) < 1e-2
+
+
+def test_block_power_top_k_matches_eigvalsh():
+    a = random_spd(seed=8)
+    w = np.linalg.eigvalsh(np.asarray(csr_to_dense(a), np.float64))
+    k = 4
+    res = solver(a).block_power(k, tol=1e-6, maxiter=800, seed=2)
+    got = np.sort(res.eigenvalues)[::-1]
+    # Converged leading Ritz values; trailing block columns converge last,
+    # so only the well-separated leaders are pinned tightly.
+    np.testing.assert_allclose(got[:2], w[::-1][:2], rtol=1e-3)
+    assert res.eigenvectors.shape == (a.shape[0], k)
+    # V orthonormal at exit (QR is the last thing the body does).
+    vtv = np.asarray(res.eigenvectors.T @ res.eigenvectors)
+    np.testing.assert_allclose(vtv, np.eye(k), atol=1e-4)
+
+
+def test_tridiag_eigvalsh_matches_dense():
+    rng = np.random.default_rng(3)
+    al = rng.standard_normal(12)
+    be = np.abs(rng.standard_normal(11)) + 0.1
+    t = np.diag(al) + np.diag(be, 1) + np.diag(be, -1)
+    np.testing.assert_allclose(
+        tridiag_eigvalsh(al, be), np.linalg.eigvalsh(t), atol=1e-10
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fused loop vs the dispatch-per-iteration host loop
+# ---------------------------------------------------------------------------
+def test_fused_cg_agrees_with_host_loop():
+    a = random_spd(seed=9)
+    s = solver(a)
+    rng = np.random.default_rng(10)
+    b = rng.standard_normal(a.shape[0]).astype(np.float32)
+    fused = s.cg(b, tol=1e-6, maxiter=400)
+    host = cg_host_loop(s.op(1)._run, b, tol=1e-6, maxiter=400)
+    assert fused.converged and host.converged
+    # Same step arithmetic (shared body closure) — the loop's location must
+    # not change what the solver computes.
+    assert fused.iterations == host.iterations
+    np.testing.assert_allclose(fused.residual, host.residual, rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(fused.x), np.asarray(host.x), atol=1e-6
+    )
+
+
+def test_fused_block_power_agrees_with_host_loop():
+    a = random_spd(seed=11)
+    s = solver(a)
+    rng = np.random.default_rng(12)
+    v0 = rng.standard_normal((a.shape[0], 4)).astype(np.float32)
+    fused = s.block_power(4, tol=1e-4, maxiter=400, v0=v0)
+    host = block_power_host_loop(s.op(4)._run, v0, tol=1e-4, maxiter=400)
+    assert fused.converged and host.converged
+    assert fused.iterations == host.iterations
+    np.testing.assert_allclose(fused.eigenvalues, host.eigenvalues, atol=1e-5)
+
+
+def test_cg_maxiter_caps_and_reports_not_converged():
+    a = random_spd(seed=13)
+    s = solver(a)
+    b = np.ones(a.shape[0], np.float32)
+    res = s.cg(b, tol=1e-12, maxiter=3)  # unreachable tol in f32
+    assert res.iterations == 3 and not res.converged
+    assert res.residual > 0
+
+
+def test_negative_tol_is_fixed_budget_mode():
+    """tol < 0 disables the convergence test: exactly maxiter iterations
+    run (even when the f32 residual underflows to exact zero, which stops
+    a tol=0 run early) and converged reports False — fig17's rate mode,
+    for both the fused programs and the host-loop baselines."""
+    a = random_spd(seed=19)
+    s = solver(a)
+    b = np.ones(a.shape[0], np.float32)
+    for n_it in (11, 40):
+        res = s.cg(b, tol=-1.0, maxiter=n_it)
+        host = cg_host_loop(s.op(1)._run, b, tol=-1.0, maxiter=n_it)
+        assert res.iterations == host.iterations == n_it
+        assert not res.converged and not host.converged
+    rng = np.random.default_rng(20)
+    v0 = rng.standard_normal((a.shape[0], 4)).astype(np.float32)
+    bp = s.block_power(4, tol=-1.0, maxiter=7, v0=v0)
+    hbp = block_power_host_loop(s.op(4)._run, v0, tol=-1.0, maxiter=7)
+    assert bp.iterations == hbp.iterations == 7
+    assert not bp.converged and not hbp.converged
+
+
+# ---------------------------------------------------------------------------
+# Mesh lane: sharded solve == single-device solve
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_shards", MESH_SIZES)
+def test_mesh_cg_matches_single_device(n_shards):
+    a = random_spd(seed=14, n=160)
+    rng = np.random.default_rng(15)
+    b = rng.standard_normal(a.shape[0]).astype(np.float32)
+    cache = PlanCache()
+    ref = solver(a, cache=cache).cg(b, tol=1e-6, maxiter=400)
+    mesh = make_spmm_mesh(n_shards)
+    res = solver(a, cache=cache, mesh=mesh).cg(b, tol=1e-6, maxiter=400)
+    assert res.converged and ref.converged
+    assert res.plan.startswith("dist/")
+    np.testing.assert_allclose(
+        np.asarray(res.x), np.asarray(ref.x), atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("n_shards", MESH_SIZES[-1:])
+def test_mesh_eigensolvers_match_single_device(n_shards):
+    a = random_spd(seed=16, n=160)
+    cache = PlanCache()
+    s1 = solver(a, cache=cache)
+    sm = solver(a, cache=cache, mesh=make_spmm_mesh(n_shards))
+    lz1 = s1.lanczos(num_steps=40, seed=3)
+    lzm = sm.lanczos(num_steps=40, seed=3)
+    np.testing.assert_allclose(
+        lzm.eigenvalues[-1], lz1.eigenvalues[-1], rtol=1e-4
+    )
+    rng = np.random.default_rng(17)
+    v0 = rng.standard_normal((a.shape[0], 4)).astype(np.float32)
+    bp1 = s1.block_power(4, tol=1e-4, maxiter=400, v0=v0)
+    bpm = sm.block_power(4, tol=1e-4, maxiter=400, v0=v0)
+    np.testing.assert_allclose(bpm.eigenvalues, bp1.eigenvalues, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Plan plumbing: solver plans are their own cache kind
+# ---------------------------------------------------------------------------
+def test_solver_step_plans_cached_separately_and_reloaded(tmp_path):
+    a = random_spd(seed=18)
+    cache = PlanCache(tmp_path / "plans.json")
+    s = SparseSolver(a, cache=cache, warmup=0, timed=1)
+    b = np.ones(a.shape[0], np.float32)
+    s.cg(b, maxiter=50)
+    s.block_power(4, maxiter=5)
+    # Fresh solver on a fresh cache object over the same file: no re-search.
+    s2 = SparseSolver(a, cache=PlanCache(tmp_path / "plans.json"))
+    s2.cg(b, maxiter=50)
+    s2.block_power(4, maxiter=5)
+    assert s2.from_cache
+    # A plain SpMV build is NOT shadowed by the solver-step plan (own kind).
+    from repro.tune import SparseOperator
+
+    op = SparseOperator.build(
+        a, cache=PlanCache(tmp_path / "plans.json"), warmup=0, timed=1
+    )
+    assert not op.from_cache or op.plan.kind == "spmv"

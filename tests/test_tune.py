@@ -373,32 +373,33 @@ def test_time_fn_env_rep_floor(monkeypatch):
     assert len(calls) == 4  # bad value ignored
 
 
-def test_plan_version_4_drops_v3_entries_and_rebuilds(tmp_path):
-    """Acceptance: the v4 bump (merge tier + hoisted row maps) must drop
-    v3-era entries at load — they were picked from a smaller space — and a
-    fresh build repopulates the file at the current version."""
+def test_plan_version_5_drops_v4_entries_and_rebuilds(tmp_path):
+    """Acceptance: the v5 bump (solver_step kind + fused byte model moving
+    the shared cost constants' crossover) must drop v4-era entries at load —
+    they were picked under the old model — and a fresh build repopulates the
+    file at the current version."""
     import json
 
     from repro.tune import PLAN_VERSION
 
-    assert PLAN_VERSION == 4
+    assert PLAN_VERSION == 5
     _, a = small_csr(seed=23)
     fp = fingerprint(a)
     path = tmp_path / "plans.json"
-    v3_entry = {  # PR-3 schema: has mesh_shape, predates the merge tier
+    v4_entry = {  # PR-4/5 schema: merge tier present, predates solver_step
         "fingerprint": fp, "kind": "spmv", "fmt": "csr", "impl": "vector",
         "params": {}, "est_cost": 1.0, "measured_s": 1e-4,
         "n_candidates": 5, "n_measured": 3, "k": 1, "backend": "cpu",
         "scale": [a.shape[0], a.shape[1], a.nnz], "mesh_shape": [],
-        "version": 3,
+        "n_raced": 0, "version": 4,
     }
-    path.write_text(json.dumps({f"{fp}:spmv:k1": v3_entry}))
+    path.write_text(json.dumps({f"{fp}:spmv:k1": v4_entry}))
     cache = PlanCache(path)
     assert len(cache) == 0 and cache.get(fp, "spmv", 1) is None
     op = SparseOperator.build(a, cache=cache, warmup=0, timed=1)
     assert not op.from_cache  # stale plan re-searched, not served
     on_disk = json.loads(path.read_text())
-    assert all(e.get("version") == 4 for e in on_disk.values())
+    assert all(e.get("version") == 5 for e in on_disk.values())
     # Restarted process reloads the rebuilt table without searching.
     assert SparseOperator.build(a, cache=PlanCache(path)).from_cache
 
