@@ -32,6 +32,7 @@ def main() -> None:
         fig14_imbalance,
         fig15_dispatch,
         fig17_solver,
+        fig18_fleet,
         table2_register_blocking,
     )
 
@@ -52,6 +53,7 @@ def main() -> None:
         "fig14": fig14_imbalance,
         "fig15": fig15_dispatch,
         "fig17": fig17_solver,
+        "fig18": fig18_fleet,
     }
     only = set(args.only.split(",")) if args.only else None
     lines: list = ["name,us_per_call,derived"]

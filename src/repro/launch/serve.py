@@ -22,13 +22,29 @@ collective schedules through the tuner (plans are cached per topology, so
 restarting on the same mesh skips the search).  ``--max-wait-ms`` enables
 admission control: a partial bucket dispatches once its oldest request has
 waited that long instead of waiting for the bucket to fill.
+
+Multi-tenant fleet: serve SEVERAL suite matrices at once through
+``repro.runtime.fleet.SparseFleet`` — per-tenant plan tables come from the
+transfer predictor (cache hit / nearest-neighbor / byte model; no measured
+search before the first result) while the background retune searches and
+hot-swaps off the hot path:
+
+  PYTHONPATH=src python -m repro.launch.serve --fleet cant,scircuit \
+      --requests 64 --max-wait-ms 5 [--stats-json stats.json]
+
+``--stats-json PATH`` (both sparse modes) dumps the run's stats summary —
+``EngineStats.summary()`` plus throughput, or the fleet-wide
+``FleetStats.summary()`` — as JSON for dashboards and CI artifacts.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
+
+from pathlib import Path
 
 from repro.configs import ARCH_IDS, get_config, get_reduced
 
@@ -121,6 +137,106 @@ def serve_sparse(args) -> None:
         f"  plans={plans}\n"
         f"  ({src}; {raced} candidates pruned by racing)"
     )
+    if args.stats_json:
+        _dump_stats(
+            args.stats_json,
+            {
+                "mode": "sparse",
+                "matrix": args.sparse,
+                "scale": args.scale,
+                "requests": len(xs),
+                "elapsed_s": round(dt, 6),
+                "req_per_s": round(len(xs) / dt, 3),
+                "gflops": round(flops / dt / 1e9, 4),
+                "plans": plans,
+                "engine": s,
+            },
+        )
+
+
+def _dump_stats(path: str, payload: dict) -> None:
+    p = Path(path)
+    if p.parent != Path("."):
+        p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
+    print(f"  stats written to {p}")
+
+
+def serve_fleet(args) -> None:
+    import jax.numpy as jnp
+
+    from repro.data.suite import SUITE, generate
+    from repro.runtime.fleet import SparseFleet
+
+    names = [s.name for s in SUITE]
+    tenants = [t for t in args.fleet.split(",") if t]
+    for t in tenants:
+        if t not in names:
+            raise SystemExit(
+                f"unknown suite matrix {t!r}; choose from: {', '.join(names)}"
+            )
+    ks = tuple(int(k) for k in args.k_buckets.split(","))
+    max_wait_s = args.max_wait_ms / 1e3 if args.max_wait_ms else None
+    fleet = SparseFleet(ks=ks, max_wait_s=max_wait_s,
+                        async_depth=args.async_depth)
+    rng = np.random.default_rng(0)
+    mats = {}
+    t0 = time.perf_counter()
+    for t in tenants:
+        mats[t] = generate(t, scale=args.scale)
+        fleet.add_tenant(t, mats[t])
+    t_admit = time.perf_counter() - t0
+    xs = {
+        t: [
+            jnp.asarray(rng.standard_normal(mats[t].shape[1], ).astype(np.float32))
+            for _ in range(args.requests)
+        ]
+        for t in tenants
+    }
+    t0 = time.perf_counter()
+    reqs = []
+    for i in range(args.requests):  # interleave tenants: shared-device load
+        for t in tenants:
+            reqs.append(fleet.submit(t, xs[t][i]))
+    while any(r._ys is None for r in reqs):
+        if fleet.step() == 0:
+            fleet.flush()
+            if max_wait_s:
+                time.sleep(min(max_wait_s / 4, 1e-3))
+    fleet.flush()
+    dt = time.perf_counter() - t0
+    fleet.wait_retunes(timeout=args.retune_wait_s)
+    fleet.close()
+    summary = fleet.stats().summary()
+    total = len(reqs)
+    print(
+        f"fleet served {total} requests over {len(tenants)} tenants "
+        f"({', '.join(tenants)}) in {dt:.3f}s ({total / dt:.1f} req/s); "
+        f"admitted in {t_admit:.3f}s "
+        f"(cache={summary['cache_admissions']} "
+        f"predicted={summary['predicted_admissions']}; "
+        f"transferred_buckets={summary['transferred_buckets']} "
+        f"byte_model_buckets={summary['byte_model_buckets']})\n"
+        f"  retunes done={summary['retunes_done']} "
+        f"failed={summary['retunes_failed']} "
+        f"swaps_applied={summary['swaps_applied']}; "
+        f"resident {summary['resident_bytes']}/{summary['budget_bytes']} B, "
+        f"evictions={summary['evictions']}"
+    )
+    if args.stats_json:
+        _dump_stats(
+            args.stats_json,
+            {
+                "mode": "fleet",
+                "tenants": tenants,
+                "scale": args.scale,
+                "requests": total,
+                "elapsed_s": round(dt, 6),
+                "req_per_s": round(total / dt, 3),
+                "admit_s": round(t_admit, 6),
+                "fleet": summary,
+            },
+        )
 
 
 def serve_lm(args) -> None:
@@ -160,6 +276,16 @@ def main():
     ap.add_argument("--sparse", default=None, metavar="MATRIX",
                     help="serve autotuned SpMV over this suite matrix "
                          "instead of an LM")
+    ap.add_argument("--fleet", default=None, metavar="M1,M2,...",
+                    help="serve several suite matrices as SparseFleet "
+                         "tenants (transfer-tuned admission + background "
+                         "retune)")
+    ap.add_argument("--stats-json", default=None, metavar="PATH",
+                    help="write the run's stats summary as JSON "
+                         "(EngineStats.summary() / FleetStats.summary())")
+    ap.add_argument("--retune-wait-s", type=float, default=60.0,
+                    help="--fleet: how long to wait for background retunes "
+                         "before reporting (0 = don't wait)")
     ap.add_argument("--scale", type=float, default=1 / 64,
                     help="suite matrix scale for --sparse")
     ap.add_argument("--k-buckets", default="1,4,16,64",
@@ -187,11 +313,14 @@ def main():
     ap.add_argument("--max-seq", type=int, default=128)
     args = ap.parse_args()
 
+    if args.fleet is not None:
+        serve_fleet(args)
+        return
     if args.sparse is not None:
         serve_sparse(args)
         return
     if args.arch is None:
-        ap.error("one of --arch or --sparse is required")
+        ap.error("one of --arch, --sparse or --fleet is required")
     serve_lm(args)
 
 

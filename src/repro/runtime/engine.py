@@ -65,6 +65,7 @@ never waits for a wide bucket to fill.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 import warnings
 from collections import deque
@@ -225,10 +226,16 @@ class SparseEngine:
         async_depth: int = 2,
         legacy_dispatch: bool = False,
         strict_dtype: bool = False,
+        ops: dict[int, SparseOperator] | None = None,
         **build_kwargs: Any,
     ):
         if not ks:
             raise ValueError("need at least one k-bucket")
+        if ops is not None and (mesh is not None or n_shards > 1):
+            raise ValueError(
+                "ops= injects a prebuilt single-device plan table; it cannot "
+                "be combined with mesh= or n_shards>1"
+            )
         self.a = a
         self.shape = a.shape
         self.ks = tuple(sorted({int(k) for k in ks}))
@@ -263,6 +270,14 @@ class SparseEngine:
                 for key, v in stack_csr_shards(part.shards).items()
             }
             self._shard_rows = np.diff(part.bounds)
+        elif ops is not None:
+            # Injected plan table (SparseFleet's predicted-plan admission):
+            # skip build_multi entirely — the caller already chose a plan per
+            # bucket (measured, cached, or transfer-predicted).
+            missing = [k for k in self.ks if int(k) not in ops]
+            if missing:
+                raise ValueError(f"ops= is missing buckets {missing}")
+            self.ops = {int(k): ops[int(k)] for k in self.ks}
         else:
             self.ops = SparseOperator.build_multi(
                 a, ks=self.ks, cache=cache, **build_kwargs
@@ -271,8 +286,13 @@ class SparseEngine:
         self._inflight: deque[tuple] = deque()  # (ys, reqs, bucket, take)
         self._rid = 0
         self._execs: dict[int, Any] = {}  # bucket -> persistent executable
-        self._mesh_runs: dict[int, Any] = {}  # bucket -> donating runner
         self._batch_fns: dict[int, Any] = {}  # legacy: bucket -> jitted stack
+        # Hot-swap staging: a background tuner builds a better plan table and
+        # stages it here (under the lock); the serving thread applies it at
+        # the next step() dispatch boundary.  See hot_swap().
+        self._swap_lock = threading.Lock()
+        self._pending_swap: tuple[dict, dict] | None = None
+        self.swaps_applied = 0
         # Shared device-resident zero column: burst tails pad their argument
         # list with it so ONE executable per bucket serves every occupancy
         # (also the legacy path's pad column).
@@ -334,6 +354,47 @@ class SparseEngine:
         self.stats.n_requests += 1
         return req
 
+    # -- hot swap -----------------------------------------------------------
+    def hot_swap(
+        self,
+        ops: dict[int, SparseOperator],
+        execs: dict[int, Any] | None = None,
+    ) -> None:
+        """Stage a replacement plan table; applied at a dispatch boundary.
+
+        Thread-safe: a background tuner calls this from its own thread with
+        a freshly built (and, via ``_make_exec``, ideally prewarmed) table;
+        the serving thread picks it up at the top of the NEXT ``step()``.
+        No lock is ever held on the hot path beyond the staging pointer
+        exchange.  Batches already in flight keep their old-plan device
+        results — their futures retire bitwise-unchanged — and every batch
+        dispatched after the swap runs the new table.  ``execs`` optionally
+        carries prewarmed per-bucket executables (missing buckets re-lower
+        lazily on first use).
+        """
+        missing = [k for k in self.ks if int(k) not in ops]
+        if missing:
+            raise ValueError(f"hot_swap ops is missing buckets {missing}")
+        staged_ops = {int(k): ops[int(k)] for k in self.ks}
+        staged_execs = {
+            int(k): v for k, v in (execs or {}).items() if int(k) in staged_ops
+        }
+        with self._swap_lock:
+            self._pending_swap = (staged_ops, staged_execs)
+
+    def _apply_pending_swap(self) -> None:
+        """Adopt a staged table (serving thread only, between dispatches)."""
+        with self._swap_lock:
+            staged = self._pending_swap
+            self._pending_swap = None
+        if staged is None:
+            return
+        ops, execs = staged
+        self.ops = ops
+        self._execs = dict(execs)  # unprewarmed buckets re-lower lazily
+        self._batch_fns.clear()  # legacy closures captured the old plans
+        self.swaps_applied += 1
+
     # -- dispatch -----------------------------------------------------------
     def _bucket_for(self, n_pending: int) -> tuple[int, int]:
         take = min(n_pending, self.ks[-1])
@@ -358,6 +419,7 @@ class SparseEngine:
         as-is (rounded up to its bucket).  ``force=True`` (used by drain)
         bypasses the wait and flushes immediately.
         """
+        self._apply_pending_swap()  # dispatch boundary: adopt a staged table
         if not self._queue:
             self._retire_ready()  # idle: resolve futures promptly
             return 0
@@ -412,24 +474,7 @@ class SparseEngine:
         fn = self._execs.get(bucket)
         if fn is not None:
             return fn
-        if self.mesh is not None:
-            # The mesh runner places its RHS across devices before its own
-            # jitted shard_map program runs, so only the slab assembly
-            # lowers here; the expensive collective program is compiled
-            # once per bucket and donates the engine-owned slab.
-            run = self._mesh_runs.get(bucket)
-            if run is None:
-                op = self.ops[bucket]
-                run = self._mesh_runs[bucket] = _bind_runner(
-                    self.a, op.plan.candidate, op._prep, k=op.plan.k,
-                    mesh=self.mesh, axis=self.axis, donate_rhs=True,
-                )
-            asm = fused_batch_executable(None, bucket=bucket)
-
-            def fn(*xs, _asm=asm, _run=run):
-                return _run(_asm(*xs))
-
-        elif self.n_shards > 1:
+        if self.mesh is None and self.n_shards > 1:
             stacked = self._stacked
             counts = [int(r) for r in self._shard_rows]
 
@@ -441,11 +486,33 @@ class SparseEngine:
                 bucket=bucket,
             )
         else:
-            fn = fused_batch_executable(
-                self.ops[bucket]._run, bucket=bucket,
-            )
+            fn = self._make_exec(bucket, self.ops[bucket])
         self._execs[bucket] = fn
         return fn
+
+    def _make_exec(self, bucket: int, op: SparseOperator):
+        """Lower ONE bucket's executable for ``op`` without touching engine
+        state — besides backing ``_exec``'s lazy path, this is how a retune
+        thread prewarms a staged table (build the fn, call it once with
+        zeros, then ``hot_swap(ops, execs=...)`` so the serving thread never
+        pays the lowering).
+        """
+        if self.mesh is not None:
+            # The mesh runner places its RHS across devices before its own
+            # jitted shard_map program runs, so only the slab assembly
+            # lowers here; the expensive collective program is compiled
+            # once per bucket and donates the engine-owned slab.
+            run = _bind_runner(
+                self.a, op.plan.candidate, op._prep, k=op.plan.k,
+                mesh=self.mesh, axis=self.axis, donate_rhs=True,
+            )
+            asm = fused_batch_executable(None, bucket=bucket)
+
+            def fn(*xs, _asm=asm, _run=run):
+                return _run(_asm(*xs))
+
+            return fn
+        return fused_batch_executable(op._run, bucket=bucket)
 
     # -- retirement ---------------------------------------------------------
     def _retire_one(self) -> int:

@@ -23,26 +23,35 @@ from .candidates import (
     sell_padded_slots,
     split_reorder,
 )
-from .features import MatrixFeatures, extract
+from .features import FEATURE_NAMES, MatrixFeatures, extract, feature_vector
 from .operator import (
+    PrepCache,
     SparseOperator,
+    evict_prepared,
+    prep_memo_stats,
+    prep_nbytes,
     prepare,
     prepare_cached,
     runner,
     solver_step_probe,
 )
 from .plan import PLAN_VERSION, Plan, PlanCache, default_cache, fingerprint
+from .predict import PREDICT_RADIUS, Prediction, predict_candidate
 from .timing import TIMED, WARMUP, time_fn
 
 __all__ = [
     "BCSR_BLOCKS",
     "Candidate",
     "DEFAULT_PRUNE_FACTOR",
+    "FEATURE_NAMES",
     "MERGE_CHUNKS",
     "MatrixFeatures",
     "PLAN_VERSION",
+    "PREDICT_RADIUS",
     "Plan",
     "PlanCache",
+    "PrepCache",
+    "Prediction",
     "REORDER_METHODS",
     "SCHEDULES",
     "SELL_SIGMAS",
@@ -54,9 +63,14 @@ __all__ = [
     "enumerate_candidates",
     "enumerate_mesh_candidates",
     "estimate_cost",
+    "evict_prepared",
     "extract",
+    "feature_vector",
     "fingerprint",
     "make",
+    "predict_candidate",
+    "prep_memo_stats",
+    "prep_nbytes",
     "prepare",
     "prepare_cached",
     "prune",

@@ -6,17 +6,25 @@ Table 2 register-blocking choice, nnz/row dispersion drives load balancing,
 and the x-vector footprint against the VMEM budget decides whether the SELL
 kernel needs column-slab cache blocking (Nishtala et al. in the paper's
 references).  All are O(nnz) numpy on the host CSR.
+
+Because plans persist these features alongside the winning candidate
+(``Plan.features``), the plan cache doubles as a labelled dataset of
+(structure -> winning plan); :mod:`repro.tune.predict` nearest-neighbors
+over :func:`feature_vector` to transfer a plan to a *new* fingerprint
+without paying the measured search.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
+from typing import Any, Mapping
 
 import numpy as np
 
 from repro.core.formats import CSRMatrix
 from repro.core.metrics import matrix_bandwidth, ucld, utd
 
-__all__ = ["MatrixFeatures", "extract"]
+__all__ = ["MatrixFeatures", "extract", "FEATURE_NAMES", "feature_vector"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,6 +39,67 @@ class MatrixFeatures:
     bandwidth: int  # max |i - j| over nonzeros
     x_bytes: int  # footprint of the dense operand (k columns)
     x_fits_vmem: bool
+
+    def to_dict(self) -> dict[str, Any]:
+        """Plain-python dict, safe for JSON persistence inside a Plan.
+
+        numpy scalars (ucld/utd come back as np.float64) are coerced so the
+        plan cache's ``json.dump`` never chokes on a feature value.
+        """
+        out: dict[str, Any] = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, (bool, np.bool_)):
+                out[f.name] = bool(v)
+            elif isinstance(v, (int, np.integer)):
+                out[f.name] = int(v)
+            else:
+                out[f.name] = float(v)
+        return out
+
+
+# The embedding the transfer-tuning predictor measures distance in.  Size
+# quantities enter log-scaled: a 2x-larger matrix of the same family should
+# be a *near* neighbor (the paper's phenomena are per-row/per-tile densities,
+# not absolute size), while the density/dispersion predictors (cv, ucld, utd)
+# enter raw — they are already O(1) and they are what actually picks kernels.
+FEATURE_NAMES = (
+    "log_m",
+    "log_n",
+    "log_nnz",
+    "log_nnz_row_mean",
+    "nnz_row_cv",
+    "ucld",
+    "utd",
+    "log_bandwidth",
+    "x_fits_vmem",
+)
+
+
+def feature_vector(
+    feats: "MatrixFeatures | Mapping[str, Any]",
+) -> np.ndarray | None:
+    """Embed features (live or from ``Plan.features``) into FEATURE_NAMES
+    order; None when a required key is missing (a cache entry written by a
+    different feature schema must be skipped, never crash the predictor)."""
+    d = feats.to_dict() if isinstance(feats, MatrixFeatures) else feats
+    try:
+        return np.array(
+            [
+                math.log10(max(float(d["m"]), 1.0)),
+                math.log10(max(float(d["n"]), 1.0)),
+                math.log10(max(float(d["nnz"]), 1.0)),
+                math.log10(float(d["nnz_row_mean"]) + 1.0),
+                float(d["nnz_row_cv"]),
+                float(d["ucld"]),
+                float(d["utd"]),
+                math.log10(float(d["bandwidth"]) + 1.0),
+                1.0 if d["x_fits_vmem"] else 0.0,
+            ],
+            dtype=np.float64,
+        )
+    except (KeyError, TypeError, ValueError):
+        return None
 
 
 def extract(a: CSRMatrix, *, k: int = 1, val_bytes: int = 4) -> MatrixFeatures:

@@ -20,6 +20,8 @@ from __future__ import annotations
 import collections
 import hashlib
 import math
+import os
+import threading
 from typing import Any, Callable, Iterable
 
 import jax
@@ -51,8 +53,12 @@ from .timing import RACE_FACTOR, time_fn
 
 __all__ = [
     "SparseOperator",
+    "PrepCache",
+    "prep_nbytes",
     "prepare",
     "prepare_cached",
+    "evict_prepared",
+    "prep_memo_stats",
     "runner",
     "solver_step_probe",
 ]
@@ -137,13 +143,125 @@ def prepare(
 # ---------------------------------------------------------------------------
 # Preparation memo: one prepared-dict instance per (structure, values, cand)
 # ---------------------------------------------------------------------------
-# The engine's k-buckets and the benchmarks' pinned candidates used to
-# re-prepare (and re-hold on device) one format dict per k — but preparation
-# depends only on the matrix, never on k.  Keyed by the structure fingerprint
-# plus a value digest (two matrices sharing a pattern share plans but NOT
-# prepared values), every caller holding the same matrix shares one instance.
-_PREP_MEMO: collections.OrderedDict = collections.OrderedDict()
-_PREP_MEMO_CAP = 64  # LRU bound: a prepared dict can pin O(matrix) memory
+def prep_nbytes(obj: Any) -> int:
+    """Device/host bytes pinned by a prepared format dict (recursive).
+
+    Counts every array leaf (jax and numpy both expose ``.nbytes``) through
+    nested dicts/lists, including the reordered-candidate case where the
+    prep holds a whole permuted :class:`CSRMatrix`.  This is the weight the
+    residency budgets below (and the fleet's tenant accounting) charge.
+    """
+    if isinstance(obj, CSRMatrix):
+        return prep_nbytes([obj.indptr, obj.indices, obj.data])
+    if isinstance(obj, dict):
+        return sum(prep_nbytes(v) for v in obj.values())
+    if isinstance(obj, (list, tuple)):
+        return sum(prep_nbytes(v) for v in obj)
+    nbytes = getattr(obj, "nbytes", None)
+    return int(nbytes) if nbytes is not None else 0
+
+
+_ENV_PREP_BUDGET = "REPRO_PREP_BUDGET_BYTES"
+_DEFAULT_PREP_BUDGET = 256 * 1024 * 1024  # prepared dicts are O(matrix) each
+
+
+class PrepCache:
+    """Byte-budgeted, thread-safe memo of prepared format dicts.
+
+    The engine's k-buckets and the benchmarks' pinned candidates used to
+    re-prepare (and re-hold on device) one format dict per k — but
+    preparation depends only on the matrix, never on k.  Keyed by the
+    structure fingerprint plus a value digest (two matrices sharing a
+    pattern share plans but NOT prepared values), every caller holding the
+    same matrix shares one instance.
+
+    Pre-PR-7 this memo was an unbounded-bytes LRU capped at 64 *entries*;
+    across a multi-tenant fleet that is hundreds of matrices' prepared
+    arrays pinned forever.  Now eviction is by BYTES (LRU order, never the
+    entry just inserted — the caller holds it), with hit/miss/evict
+    counters surfaced through :func:`prep_memo_stats` into ``FleetStats``.
+    A single prep larger than the whole budget is still served (the caller
+    needs it) and becomes the next insert's first eviction.
+    """
+
+    def __init__(self, budget_bytes: int | None = None):
+        if budget_bytes is None:
+            budget_bytes = int(
+                os.environ.get(_ENV_PREP_BUDGET, _DEFAULT_PREP_BUDGET)
+            )
+        self.budget_bytes = int(budget_bytes)
+        self._entries: collections.OrderedDict = collections.OrderedDict()
+        self._bytes: dict = {}  # key -> cached prep_nbytes (walk once)
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def resident_bytes(self) -> int:
+        return sum(self._bytes.values())
+
+    def get_or_build(self, key: tuple, build: Callable[[], dict]) -> dict:
+        with self._lock:
+            prep = self._entries.get(key)
+            if prep is not None:
+                self.hits += 1
+                self._entries.move_to_end(key)
+                return prep
+            self.misses += 1
+        # Build OUTSIDE the lock: preparation is O(nnz) host work and two
+        # threads preparing different matrices must not serialize.  A racing
+        # duplicate build of the same key is wasted work, not corruption —
+        # last insert wins and both callers hold a correct prep.
+        prep = build()
+        nbytes = prep_nbytes(prep)
+        with self._lock:
+            self._entries[key] = prep
+            self._entries.move_to_end(key)
+            self._bytes[key] = nbytes
+            while (
+                len(self._entries) > 1
+                and self.resident_bytes > self.budget_bytes
+            ):
+                old_key, _ = self._entries.popitem(last=False)
+                self._bytes.pop(old_key, None)
+                self.evictions += 1
+        return prep
+
+    def evict_fp(self, fp: str) -> int:
+        """Drop every entry of one fingerprint (fleet tenant eviction must
+        actually release the prepared arrays, not just the engine).  Returns
+        bytes released."""
+        with self._lock:
+            keys = [k for k in self._entries if k[0] == fp]
+            released = 0
+            for k in keys:
+                del self._entries[k]
+                released += self._bytes.pop(k, 0)
+                self.evictions += 1
+            return released
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._bytes.clear()
+
+    def stats(self) -> dict[str, int]:
+        with self._lock:
+            return {
+                "entries": len(self._entries),
+                "resident_bytes": self.resident_bytes,
+                "budget_bytes": self.budget_bytes,
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+            }
+
+
+_PREP_MEMO = PrepCache()
 
 
 def _value_digest(a: CSRMatrix) -> str:
@@ -161,7 +279,8 @@ def prepare_cached(
     axis: str | None = None,
     prep_cache: dict | None = None,
 ) -> dict[str, Any]:
-    """:func:`prepare`, memoized on (fingerprint, value digest, candidate).
+    """:func:`prepare`, memoized on (fingerprint, value digest, candidate)
+    in the process-wide byte-budgeted :class:`PrepCache`.
 
     ``fmt="dist"`` candidates bypass the memo — their placement is mesh-bound
     and already shared through the caller-scoped ``prep_cache``.
@@ -169,15 +288,20 @@ def prepare_cached(
     if cand.fmt == "dist":
         return prepare(a, cand, mesh=mesh, axis=axis, prep_cache=prep_cache)
     key = (fp or fingerprint(a), _value_digest(a), cand.key())
-    prep = _PREP_MEMO.get(key)
-    if prep is None:
-        prep = prepare(a, cand)
-        _PREP_MEMO[key] = prep
-        while len(_PREP_MEMO) > _PREP_MEMO_CAP:
-            _PREP_MEMO.popitem(last=False)
-    else:
-        _PREP_MEMO.move_to_end(key)
-    return prep
+    return _PREP_MEMO.get_or_build(key, lambda: prepare(a, cand))
+
+
+def evict_prepared(fp: str) -> int:
+    """Release every memoized prepared dict of one fingerprint; returns
+    bytes released.  The fleet's residency manager calls this when it
+    evicts a tenant."""
+    return _PREP_MEMO.evict_fp(fp)
+
+
+def prep_memo_stats() -> dict[str, int]:
+    """Hit/miss/evict + residency counters of the process-wide prep memo
+    (wired into ``FleetStats``)."""
+    return _PREP_MEMO.stats()
 
 
 def solver_step_probe(run, k: int):
@@ -359,6 +483,9 @@ class SparseOperator:
         self._run = runner(a, plan.candidate, prep, k=plan.k, mesh=mesh, axis=axis)
         self._csr_dev: dict | None = prep.get("dev")  # fallback path, lazy
         self._aot: dict = {}  # donate_rhs -> persistent compiled executable
+        # Set by build_predicted: the tune.predict.Prediction that chose
+        # this plan (None for measured / cache-loaded operators).
+        self.predicted = None
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -508,6 +635,11 @@ class SparseOperator:
             scale=scale,
             mesh_shape=mesh_shape,
             n_raced=n_raced,
+            # The searched features ride along in the persisted plan: the
+            # cache doubles as the transfer-tuning training set
+            # (tune.predict nearest-neighbors over them for new
+            # fingerprints).
+            features=feats.to_dict(),
         )
         cache.put(plan)
         return cls(
@@ -520,6 +652,83 @@ class SparseOperator:
             mesh=mesh,
             axis=axis,
         )
+
+    # -- transfer tuning ----------------------------------------------------
+    @classmethod
+    def build_predicted(
+        cls,
+        a: CSRMatrix,
+        *,
+        k: int | None = None,
+        cache: PlanCache | None = None,
+        radius: float | None = None,
+        exclude: Iterable[str] = (),
+    ) -> "SparseOperator":
+        """A serve-NOW operator: no measured search, ever.
+
+        Resolution order (single-device only — mesh plans are topology-bound
+        point measurements and are not predicted):
+
+        1. exact plan-cache hit for this fingerprint/backend/scale — the
+           normal warm path, identical to ``build`` without ``force_search``;
+        2. nearest-neighbor transfer (:func:`repro.tune.predict.
+           predict_candidate`): the cached plan whose persisted features are
+           closest to this matrix's, if within the confidence radius;
+        3. byte-model argmin over the enumerated candidate space.
+
+        The returned plan has ``measured_s == 0`` and ``predicted_from``
+        set (neighbor fingerprint or ``"byte_model"``) unless it came from
+        the cache; predicted plans are NEVER persisted — the fleet's
+        background retune runs the real search and its measured plan both
+        enters the cache and hot-swaps the serving executables.  ``exclude``
+        drops training fingerprints (leave-one-out evaluation).
+        """
+        from .predict import PREDICT_RADIUS, predict_candidate
+
+        kind = "spmv" if k is None else "spmm"
+        kk = 1 if k is None else int(k)
+        fp = fingerprint(a)
+        backend = jax.default_backend()
+        scale = [int(a.shape[0]), int(a.shape[1]), int(a.nnz)]
+        cache = default_cache() if cache is None else cache
+        plan = cache.get(fp, kind, kk, backend=backend, scale=scale)
+        if plan is not None:
+            return cls(
+                a,
+                plan,
+                prepare_cached(a, plan.candidate, fp=fp),
+                from_cache=True,
+            )
+        feats = extract(a, k=kk)
+        pred = predict_candidate(
+            a, kind, kk, cache,
+            feats=feats, backend=backend, exclude=set(exclude) | {fp},
+            radius=PREDICT_RADIUS if radius is None else radius,
+        )
+        cand = pred.candidate
+        plan = Plan(
+            fingerprint=fp,
+            kind=kind,
+            fmt=cand.fmt,
+            impl=cand.impl,
+            params={kp: list(v) if isinstance(v, tuple) else v
+                    for kp, v in cand.params},
+            est_cost=estimate_cost(a, cand, feats, k=kk),
+            measured_s=0.0,
+            n_candidates=pred.n_neighbors,
+            n_measured=0,
+            k=kk,
+            backend=backend,
+            scale=scale,
+            features=feats.to_dict(),
+            predicted_from=pred.source,
+        )
+        op = cls(
+            a, plan, prepare_cached(a, cand, fp=fp),
+            from_cache=False, features=feats,
+        )
+        op.predicted = pred
+        return op
 
     # -- persistent executables ---------------------------------------------
     def aot(self, *, donate_rhs: bool = False):

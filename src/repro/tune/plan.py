@@ -88,6 +88,20 @@ class Plan:
     # another — the allgather/ring crossover moves with P — so a topology
     # change is a miss, same as backend/scale.
     mesh_shape: list = dataclasses.field(default_factory=list)
+    # Structural features of the fingerprinted matrix at search time
+    # (MatrixFeatures.to_dict()).  Persisting them turns the plan cache into
+    # a labelled (features -> winning plan) dataset that tune.predict
+    # nearest-neighbors over for transfer tuning.  Schema-additive: absent
+    # in pre-PR-7 entries (loads as None, the entry is simply not usable as
+    # a training point) and never consulted by cache matching, so no
+    # PLAN_VERSION bump — it changes no picks.
+    features: dict | None = None
+    # "" for measured plans.  A *predicted* plan (SparseOperator.
+    # build_predicted) records where its candidate came from: the neighbor
+    # fingerprint it transferred from, or "byte_model" for the argmin
+    # fallback.  Predicted plans are never persisted — only measured search
+    # results enter the cache — so on cached entries this is always "".
+    predicted_from: str = ""
     version: int = PLAN_VERSION
 
     def matches(
@@ -201,6 +215,20 @@ class PlanCache:
         if not plan.matches(backend, scale, mesh_shape):
             return None
         return plan
+
+    def plans(self) -> list[Plan]:
+        """Every well-formed resident plan — the predictor's training set.
+
+        Entries whose shape drifted (hand edits, foreign schemas) are
+        skipped, mirroring ``get``'s treat-as-miss discipline.
+        """
+        out = []
+        for d in self._plans.values():
+            try:
+                out.append(Plan.from_json(d))
+            except TypeError:
+                continue
+        return out
 
     @contextlib.contextmanager
     def _write_lock(self):

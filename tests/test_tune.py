@@ -523,3 +523,138 @@ def test_aot_executable_matches_dispatch_and_supports_donation():
     Xd = jnp.asarray(np.asarray(X))
     y = opd.aot(donate_rhs=True)(Xd)
     np.testing.assert_allclose(np.asarray(y), np.asarray(op4 @ X), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Transfer tuning: persisted features, prediction, prep-memo byte budget
+# ---------------------------------------------------------------------------
+def test_plan_features_persist_and_old_entries_load_cleanly(tmp_path):
+    """Measured plans persist their feature vector (the transfer training
+    set); a pre-PR-7 entry WITHOUT the field still loads — schema-additive,
+    same PLAN_VERSION, treated as not-a-training-point rather than dropped."""
+    import json
+
+    from repro.tune import feature_vector
+
+    path = tmp_path / "plans.json"
+    d, a = small_csr(seed=40)
+    op = SparseOperator.build(a, cache=PlanCache(path), warmup=0, timed=1)
+    assert op.plan.features is not None
+    assert feature_vector(op.plan.features) is not None
+
+    # Round-trip through disk: features survive JSON.
+    reread = PlanCache(path)
+    plan = reread.get(fingerprint(a), "spmv", 1)
+    assert plan is not None and plan.features == op.plan.features
+    assert plan.predicted_from == ""  # measured plans never carry a source
+
+    # Simulate a pre-PR-7 cache entry: strip the additive fields on disk.
+    raw = json.loads(path.read_text())
+    for v in raw.values():
+        v.pop("features", None)
+        v.pop("predicted_from", None)
+    path.write_text(json.dumps(raw))
+    legacy = PlanCache(path)
+    old = legacy.get(fingerprint(a), "spmv", 1)
+    assert old is not None  # loads cleanly: a cache HIT, not a re-search
+    assert old.features is None and old.version == plan.version
+    assert legacy.plans()  # and enumerates without crashing
+    # ... it is simply unusable as a training point:
+    from repro.tune import predict_candidate
+
+    pred = predict_candidate(a, "spmv", 1, legacy)
+    assert pred.source == "byte_model" and pred.n_neighbors == 0
+
+
+def test_predict_transfers_within_radius_and_falls_back_beyond():
+    from repro.tune import predict_candidate
+
+    cache = PlanCache()
+    d, a = small_csr(seed=41)
+    op = SparseOperator.build(a, cache=cache, warmup=0, timed=1)
+    _, b = small_csr(seed=42)  # same family: close in feature space
+
+    pred = predict_candidate(b, "spmv", 1, cache)
+    assert pred.confident and pred.source == fingerprint(a)
+    assert pred.candidate.key() == op.plan.candidate.key()
+    # Excluding the only neighbor forces the byte-model prior.
+    alone = predict_candidate(b, "spmv", 1, cache,
+                              exclude={fingerprint(a)})
+    assert not alone.confident and alone.source == "byte_model"
+    # A vanishing radius also rejects the neighbor (distance recorded).
+    far = predict_candidate(b, "spmv", 1, cache, radius=0.0)
+    assert not far.confident and far.source == "byte_model"
+    assert np.isfinite(far.distance)
+
+
+def test_build_predicted_never_persists_and_marks_provenance():
+    cache = PlanCache()
+    d, a = small_csr(seed=43)
+    # Empty cache: byte-model fallback, nothing persisted.
+    op = SparseOperator.build_predicted(a, cache=cache)
+    assert op.plan.predicted_from == "byte_model"
+    assert op.plan.measured_s == 0.0 and op.plan.n_measured == 0
+    assert len(cache) == 0  # predicted plans NEVER enter the cache
+    x = np.random.default_rng(44).standard_normal(a.shape[1]).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(op @ jnp.asarray(x)), d @ x,
+                               atol=2e-3)
+
+    # Train the cache, then: exact hit wins over prediction...
+    measured = SparseOperator.build(a, cache=cache, warmup=0, timed=1)
+    hit = SparseOperator.build_predicted(a, cache=cache)
+    assert hit.from_cache and hit.predicted is None
+    assert hit.plan.candidate == measured.plan.candidate
+    # ... and a sibling fingerprint transfers with provenance recorded.
+    _, b = small_csr(seed=45)
+    sib = SparseOperator.build_predicted(b, cache=cache)
+    assert sib.plan.predicted_from == fingerprint(a)
+    assert sib.predicted is not None and sib.predicted.confident
+    assert len(cache) == 1  # still only the measured plan
+
+
+def test_prep_cache_byte_budget_evicts_lru_and_counts():
+    from repro.tune import PrepCache, make, prep_nbytes, prepare
+
+    d, a = small_csr(seed=46)
+    cands = [make("csr", "vector"), make("csr", "gather"),
+             make("sell", "ref", C=8, sigma=64)]
+    preps = [prepare(a, c) for c in cands]
+    per = [prep_nbytes(p) for p in preps]
+    assert all(b > 0 for b in per)
+
+    # Budget is one byte short of all three: inserting the third evicts
+    # exactly the least-recently-used entry.
+    pc = PrepCache(budget_bytes=per[0] + per[1] + per[2] - 1)
+    for i, c in enumerate(cands[:2]):
+        assert pc.get_or_build((fingerprint(a), i), lambda i=i: preps[i]) is preps[i]
+    assert pc.stats()["misses"] == 2 and len(pc) == 2
+    # Touch entry 0 so entry 1 is the least-recently-used.
+    pc.get_or_build((fingerprint(a), 0), lambda: None)
+    assert pc.stats()["hits"] == 1
+    pc.get_or_build((fingerprint(a), 2), lambda: preps[2])
+    s = pc.stats()
+    assert s["evictions"] >= 1 and s["resident_bytes"] <= pc.budget_bytes
+    assert pc.get_or_build((fingerprint(a), 0), lambda: "rebuilt") is preps[0]
+
+    # An over-budget single prep is still served (never refused), and
+    # evict_fp drops every entry of a fingerprint, returning bytes freed.
+    tiny = PrepCache(budget_bytes=1)
+    assert tiny.get_or_build(("fp", 0), lambda: preps[0]) is preps[0]
+    assert len(tiny) == 1  # the just-inserted entry is never self-evicted
+    freed = tiny.evict_fp("fp")
+    assert freed == per[0] and len(tiny) == 0
+
+
+def test_prepare_cached_respects_global_budget_counters():
+    from repro.tune import make, prep_memo_stats, prepare_cached
+
+    d, a = small_csr(seed=47)
+    before = prep_memo_stats()
+    c = make("csr", "gather")
+    p1 = prepare_cached(a, c)
+    p2 = prepare_cached(a, c)
+    assert p1 is p2  # memo hit
+    after = prep_memo_stats()
+    assert after["hits"] >= before["hits"] + 1
+    assert after["misses"] >= before["misses"]
+    assert after["resident_bytes"] >= 0 and after["budget_bytes"] > 0
