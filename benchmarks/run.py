@@ -31,6 +31,7 @@ def main() -> None:
         fig13_mesh_engine,
         fig14_imbalance,
         fig15_dispatch,
+        fig16_spmspv,
         fig17_solver,
         fig18_fleet,
         table2_register_blocking,
@@ -52,6 +53,7 @@ def main() -> None:
         "fig13": fig13_mesh_engine,  # shard sweep adapts to visible devices
         "fig14": fig14_imbalance,
         "fig15": fig15_dispatch,
+        "fig16": fig16_spmspv,
         "fig17": fig17_solver,
         "fig18": fig18_fleet,
     }

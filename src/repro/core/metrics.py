@@ -52,7 +52,10 @@ def ucld_per_row(a: CSRMatrix, line_width: int = 8) -> np.ndarray:
 
 def ucld(a: CSRMatrix, line_width: int = 8) -> float:
     """Average UCLD (paper Fig 5 x-axis). Worst 1/line_width, best 1.0."""
-    return float(ucld_per_row(a, line_width).mean())
+    per_row = ucld_per_row(a, line_width)
+    if per_row.size == 0:  # a zero-row matrix must not yield a NaN feature
+        return 1.0
+    return float(per_row.mean())
 
 
 def utd(a: CSRMatrix, tile: tuple[int, int] = (8, 128)) -> float:

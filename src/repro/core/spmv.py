@@ -1,6 +1,6 @@
 """SpMV / SpMM reference implementations and the format-dispatch layer.
 
-Four algorithm tiers mirror the paper's compiler study (Fig 4) plus its two
+Five algorithm tiers mirror the paper's compiler study (Fig 4) plus its two
 decisive levers — latency hiding and load balance:
 
 * ``spmv_csr_scalar``  — the "-O1" analogue: one nonzero at a time via a
@@ -17,6 +17,10 @@ decisive levers — latency hiding and load balance:
 * Pallas kernels (kernels/sell_spmv, kernels/bcsr_spmm) — the hand-tiled
   vgatherd/register-blocking adaptations, their operand streams
   double-buffered through kernels/pipeline; this module only dispatches.
+* kernels/spmspv — the sparse-RHS bucket tier (Azad–Buluc): when x itself
+  is sparse, a CSC column gather expands only the touched columns into a
+  work-bucketed scatter — O(columns x selects), never O(nnz(A)).  The
+  tuner measures the density crossover against the densified tiers above.
 
 All functions take the ``device()`` pytrees of core.formats containers plus
 static shape info, so they jit cleanly.

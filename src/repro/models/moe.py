@@ -17,13 +17,21 @@ like Switch/GShard dropping).
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .common import dense_init, shard
 
-__all__ = ["MoEConfig", "moe_init", "moe_apply", "moe_apply_dense_ref"]
+__all__ = [
+    "MoEConfig",
+    "moe_init",
+    "moe_apply",
+    "moe_apply_dense_ref",
+    "moe_apply_spmspv",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,11 +79,30 @@ def _route(p, x, cfg: MoEConfig):
     return weights, ids, lb_loss, cfg.router_zloss * z_loss
 
 
-def moe_apply(p, x, cfg: MoEConfig, partition: str = "ep"):
-    """x (b, s, d) -> (y (b, s, d), aux_loss scalar)."""
+def moe_capacity(s: int, cfg: MoEConfig) -> int:
+    """Per (row, expert) slot capacity: ceil(s * k * capacity_factor / E).
+
+    Ceil, as the module docstring promises — the old floor under-allocated
+    whenever s * k * capacity_factor / E was fractional (e.g. s=8, k=2,
+    E=4, cf=1.875 -> 7.5: floor kept 7 slots for a load of 8 and silently
+    dropped a token the config said should be kept).
+    """
+    return max(math.ceil(s * cfg.top_k * cfg.capacity_factor / cfg.n_experts), 1)
+
+
+def _dispatch_expert_outputs(p, x, cfg: MoEConfig, partition: str = "ep"):
+    """Route + capacity-drop + run the experts; returns combine operands.
+
+    ``(out_flat (b, E*C+1, d), dest (b, s*k), weights (b, s, k), lb_loss,
+    z_loss, C)`` — ``out_flat`` carries every expert slot's output with a
+    trailing zero row that dropped slots point at (``dest == E*C``).
+    Shared by :func:`moe_apply` (dense ``take_along_axis`` combine) and
+    :func:`moe_apply_spmspv` (combine through the sparse stack), so the
+    two paths cannot drift.
+    """
     b, s, d = x.shape
     E, k = cfg.n_experts, cfg.top_k
-    C = max(int(s * k * cfg.capacity_factor / E), 1)
+    C = moe_capacity(s, cfg)
     weights, ids, lb_loss, z_loss = _route(p, x, cfg)
 
     # --- dispatch: per sequence row, rank tokens within each expert.
@@ -118,12 +145,24 @@ def moe_apply(p, x, cfg: MoEConfig, partition: str = "ep"):
     else:
         out = shard(out, "batch", None, None, None)
 
-    # --- combine: gather each kept slot's expert output, weight, sum over k.
+    # --- flatten slots for the combine gather.
     out_flat = out.reshape(b, E * C, d)
     out_flat = jnp.concatenate(
         [out_flat, jnp.zeros((b, 1, d), out.dtype)], axis=1
     )  # dropped slots read the zero row
     out_flat = shard(out_flat, "batch", None, None)
+    return out_flat, dest, weights, lb_loss, z_loss, C
+
+
+def moe_apply(p, x, cfg: MoEConfig, partition: str = "ep"):
+    """x (b, s, d) -> (y (b, s, d), aux_loss scalar)."""
+    b, s, d = x.shape
+    k = cfg.top_k
+    out_flat, dest, weights, lb_loss, z_loss, _ = _dispatch_expert_outputs(
+        p, x, cfg, partition
+    )
+
+    # --- combine: gather each kept slot's expert output, weight, sum over k.
     slot_out = jnp.take_along_axis(
         out_flat, dest[..., None], axis=1, mode="promise_in_bounds"
     )
@@ -147,3 +186,50 @@ def moe_apply_dense_ref(p, x, cfg: MoEConfig):
     all_out = jnp.einsum("bsef,efd->bsed", h, p["wo"])  # (b, s, E, d)
     sel = jnp.take_along_axis(all_out, ids[..., None], axis=2)  # (b, s, k, d)
     return (sel * weights[..., None].astype(sel.dtype)).sum(axis=2)
+
+
+def moe_apply_spmspv(p, x, cfg: MoEConfig, *, impl: str = "ref"):
+    """MoE combine served by the repro sparse stack: x (b,s,d) -> y (b,s,d).
+
+    The combine step IS a sparse-times-sparse product: per token, the
+    router's k-sparse slot-assignment row (the sparse activation selection)
+    multiplies the expert-output matrix (the router assignment's dispatch
+    buffer).  This routes that product through the ``fmt="spmspv"`` tier —
+    per batch row the (d x E*C+1) transposed slot-output matrix becomes a
+    CSR operand, and each token's kept (dest, weight) pairs become a sorted
+    sparse RHS in the nnz(x) = top_k bucket — touching O(k * d) stored
+    values per token instead of scanning all E*C slots.
+
+    Routing/dispatch replicate :func:`moe_apply` exactly (shared
+    ``_dispatch_expert_outputs``), so at a capacity_factor high enough that
+    nothing drops this matches :func:`moe_apply_dense_ref` to f32
+    tolerance.  Host-side per-token dispatch — tests and benchmarks only
+    (the jit training path stays :func:`moe_apply`); ``impl`` picks the
+    spmspv kernel ("ref" or "pallas").
+    """
+    from repro.core.formats import csr_from_dense
+    from repro.tune import SparseOperator, make
+
+    b, s, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    out_flat, dest, weights, _, _, C = _dispatch_expert_outputs(p, x, cfg)
+    dest_np = np.asarray(dest).reshape(b, s, k)
+    w_np = np.asarray(weights).reshape(b, s, k)
+    out_np = np.asarray(out_flat)  # (b, E*C+1, d)
+    ys = np.zeros((b, s, d), np.float32)
+    for bi in range(b):
+        # Columns of the operand are slots; the trailing zero row (index
+        # E*C) vanishes from the CSR pattern, so dropped slots are simply
+        # filtered from the RHS below.
+        a_T = csr_from_dense(out_np[bi].T.astype(np.float32))  # (d, E*C+1)
+        op = SparseOperator.from_candidate(a_T, make("spmspv", impl), x_nnz=k)
+        for t in range(s):
+            di = dest_np[bi, t]
+            wv = w_np[bi, t].astype(np.float32)
+            kept = di < E * C  # dropped slots contribute exactly zero
+            di, wv = di[kept], wv[kept]
+            order = np.argsort(di)  # kept dests are distinct (expert, rank)
+            ys[bi, t] = np.asarray(
+                op.apply_sparse(di[order].astype(np.int64), wv[order])
+            )
+    return jnp.asarray(ys)

@@ -97,10 +97,12 @@ class EngineRequest:
     """
 
     rid: int
-    x: jax.Array  # (n,)
+    x: Any  # (n,) dense operand, or (indices, values) for submit_sparse
     t_submit: float
     t_done: float | None = None
-    bucket: int | None = None  # k-bucket the request was dispatched in
+    # k-bucket the request was dispatched in; sparse-RHS requests carry
+    # ("spmspv", <x-nnz bucket>) so the two bucket spaces never collide.
+    bucket: Any = None
     _ys: jax.Array | None = None  # the whole batch result (m, bucket)
     _col: int = 0  # this request's column of _ys
     _engine: Any = dataclasses.field(default=None, repr=False, compare=False)
@@ -139,9 +141,18 @@ class EngineStats:
     occupied_cols: int = 0  # real request columns dispatched (served work)
     padded_cols: int = 0  # zero columns added by bucket round-up (NOT work)
     latencies_s: list = dataclasses.field(default_factory=list)
+    # Sparse-RHS dispatches, counted per x-nnz bucket ("spmspv<B>" keys).
+    # They never enter the k-bucket occupancy math: a sparse dispatch serves
+    # exactly one request, so column padding does not apply to it.
+    sparse_dispatched: dict = dataclasses.field(default_factory=dict)
 
-    def record(self, bucket: int, n_real: int, lats: Iterable[float]) -> None:
+    def record(self, bucket, n_real: int, lats: Iterable[float]) -> None:
         self.n_dispatches += 1
+        if isinstance(bucket, tuple):  # ("spmspv", B): sparse-RHS dispatch
+            key = f"spmspv{bucket[1]}"
+            self.sparse_dispatched[key] = self.sparse_dispatched.get(key, 0) + 1
+            self.latencies_s.extend(lats)
+            return
         self.dispatched[bucket] = self.dispatched.get(bucket, 0) + 1
         self.occupied_cols += n_real
         self.padded_cols += bucket - n_real
@@ -172,6 +183,7 @@ class EngineStats:
             "requests": self.n_requests,
             "dispatches": self.n_dispatches,
             "by_bucket": dict(sorted(self.dispatched.items())),
+            "sparse_by_bucket": dict(sorted(self.sparse_dispatched.items())),
             "occupancy": round(self.occupancy, 4),
             "padded_occupancy": round(self.padded_occupancy, 4),
             "served_cols": self.occupied_cols,
@@ -227,6 +239,7 @@ class SparseEngine:
         legacy_dispatch: bool = False,
         strict_dtype: bool = False,
         ops: dict[int, SparseOperator] | None = None,
+        x_nnz_buckets: Sequence[int] | None = None,
         **build_kwargs: Any,
     ):
         if not ks:
@@ -282,6 +295,20 @@ class SparseEngine:
             self.ops = SparseOperator.build_multi(
                 a, ks=self.ks, cache=cache, **build_kwargs
             )
+        # Sparse-RHS serving state (submit_sparse): requests bucket by
+        # nnz(x) the way dense requests bucket by k.  Plans build lazily on
+        # first use of each bucket (plan-cached, so restarts are warm).
+        self._cache = cache
+        self._build_kwargs = dict(build_kwargs)
+        if x_nnz_buckets is None:
+            n = a.shape[1]
+            x_nnz_buckets = (
+                max(1, n // 256), max(1, n // 64), max(1, n // 16),
+                max(1, n // 4),
+            )
+        self.x_nnz_buckets = tuple(sorted({max(1, int(b)) for b in x_nnz_buckets}))
+        self._sparse_ops: dict[int, SparseOperator] = {}
+        self._sparse_execs: dict[int, Any] = {}
         self._queue: deque[EngineRequest] = deque()
         self._inflight: deque[tuple] = deque()  # (ys, reqs, bucket, take)
         self._rid = 0
@@ -353,6 +380,94 @@ class SparseEngine:
         self._queue.append(req)
         self.stats.n_requests += 1
         return req
+
+    # -- sparse RHS ---------------------------------------------------------
+    def submit_sparse(self, indices, values) -> EngineRequest:
+        """Serve y = A @ x for a SPARSE x given as sorted (indices, values).
+
+        The sparse-RHS analogue of :meth:`submit`: the request is routed to
+        the smallest ``x_nnz_buckets`` entry >= nnz(x) and dispatched
+        through the ``kind="spmspv"`` plan tuned for that bucket
+        (:meth:`SparseOperator.build` with ``x_nnz=``), mirroring how dense
+        requests round up to k-buckets.  Coordinates are validated loudly —
+        out-of-range, unsorted, or duplicated indices raise ``ValueError``
+        with remediation text (kernels.spmspv.validate_sparse_rhs) — and
+        values follow the engine's f32 dtype policy.  A request thicker
+        than the largest bucket densifies onto the dense k=1 path: past the
+        measured crossover the dense tiers win anyway.
+
+        Sparse requests dispatch immediately (they never aggregate into
+        SpMM slabs — each is its own single-column program), but they share
+        the async in-flight window and retire through the same machinery;
+        the returned future behaves exactly like a dense one.
+        """
+        if self.mesh is not None or self.n_shards > 1:
+            raise NotImplementedError(
+                "submit_sparse is single-device for now: distributed SpMSpV "
+                "under the mesh schedules is the ROADMAP follow-on of this "
+                "tier"
+            )
+        from repro.kernels.spmspv import pad_sparse_rhs, validate_sparse_rhs
+
+        n = self.shape[1]
+        idx, val = validate_sparse_rhs(indices, values, n)
+        val = np.asarray(val)
+        if val.dtype != np.float32:
+            if self.strict_dtype:
+                raise TypeError(
+                    f"submit_sparse() got values dtype {val.dtype}; this "
+                    "engine serves float32 and strict_dtype=True forbids "
+                    "the implicit cast"
+                )
+            if not self._dtype_warned:
+                self._dtype_warned = True
+                warnings.warn(
+                    f"SparseEngine.submit_sparse: casting {val.dtype} values "
+                    "to float32 (the engine's serving dtype) — submit "
+                    "float32 to avoid the cast, or build the engine with "
+                    "strict_dtype=True to make this an error; warning once "
+                    "per engine",
+                    stacklevel=2,
+                )
+            val = val.astype(np.float32)
+        bucket = next((b for b in self.x_nnz_buckets if b >= idx.size), None)
+        if bucket is None:
+            x = np.zeros((n,), np.float32)
+            x[idx] = val
+            return self.submit(x)
+        xi, xv = pad_sparse_rhs(idx, val, bucket, n)
+        req = EngineRequest(
+            rid=self._rid, x=(idx, val), t_submit=time.perf_counter(),
+            _engine=self,
+        )
+        self._rid += 1
+        self.stats.n_requests += 1
+        window = max(1, self.async_depth)
+        while len(self._inflight) >= window:
+            self._retire_one()
+        ys = self._sparse_exec(bucket)((xi, xv))  # host tuple: the
+        # spmspv runner picks the work bucket from xi on host
+        self._inflight.append((ys, [req], ("spmspv", bucket), 1))
+        if self.async_depth == 0:
+            self._retire_one()
+        return req
+
+    def _sparse_op(self, bucket: int) -> SparseOperator:
+        op = self._sparse_ops.get(bucket)
+        if op is None:
+            op = self._sparse_ops[bucket] = SparseOperator.build(
+                self.a, x_nnz=bucket, cache=self._cache, **self._build_kwargs
+            )
+        return op
+
+    def _sparse_exec(self, bucket: int):
+        fn = self._sparse_execs.get(bucket)
+        if fn is None:
+            # The sparse runner is already a persistent per-work-bucket
+            # dispatch (spmspv_bind caches jitted executables per gathered
+            # work size); no fused batch assembly applies to one request.
+            fn = self._sparse_execs[bucket] = self._sparse_op(bucket)._run
+        return fn
 
     # -- hot swap -----------------------------------------------------------
     def hot_swap(

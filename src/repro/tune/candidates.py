@@ -20,6 +20,7 @@ dropped without being timed.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Iterable
 
 import numpy as np
@@ -192,6 +193,30 @@ def enumerate_candidates(
     if kind == "solver_step":
         kind = "spmv" if int(k) == 1 else "spmm"
         include_scalar = False
+    if kind == "spmspv":
+        # Sparse-RHS search space: every dense-RHS SpMV tier competes through
+        # a densify wrapper (tune.operator.sparse_rhs_runner), so the
+        # dense-vs-spmspv crossover is a *measured* decision on one operand,
+        # not an API fork; the spmspv bucket kernels join the same space.
+        # The scalar tier is excluded (a sequential row loop cannot exploit
+        # x sparsity) and reorders don't ride (the permutation would have to
+        # re-sort the sparse coordinates on every call).
+        cands = enumerate_candidates(
+            feats,
+            "spmv",
+            k=1,
+            sigmas=sigmas,
+            bcsr_blocks=bcsr_blocks,
+            chunk_tiles=chunk_tiles,
+            merge_chunks=merge_chunks,
+            include_scalar=False,
+            include_pallas=include_pallas,
+            reorders=(),
+        )
+        cands.append(make("spmspv", "ref"))
+        if include_pallas:
+            cands.append(make("spmspv", "pallas", slab=4096))
+        return cands
     cands: list[Candidate] = [make("csr", "vector")]
     cands.extend(make("merge", "scan", chunk=int(c)) for c in merge_chunks)
     if kind == "spmv":
@@ -308,6 +333,7 @@ def estimate_cost(
     idx_bytes: int = 4,
     on_cpu: bool | None = None,
     fused: bool = False,
+    sparse_rhs: bool = False,
 ) -> float:
     """Abstract cost (bytes x impl slowdown) of running this candidate.
 
@@ -321,6 +347,12 @@ def estimate_cost(
     axpy/dot vector traffic (:data:`SOLVER_VEC_PASSES` m-vector passes) is
     added.  Small matrices stop being overhead-bound under fusion, which
     is exactly the crossover shift that makes solver plans their own kind.
+
+    ``sparse_rhs=True`` estimates serving a *sparse* x (kind="spmspv"):
+    the ``fmt="spmspv"`` branch charges only the touched columns (scaled
+    by ``feats.x_density``), while dense-RHS tiers pay one extra densify
+    pass over the operand vector — which is how the tuner crosses over
+    from the dense tiers to spmspv as x thins.
     """
     if on_cpu is None:
         from repro.kernels.ops import on_cpu as _on_cpu
@@ -338,11 +370,26 @@ def estimate_cost(
             estimate_cost(
                 a, base, feats, k=k, val_bytes=val_bytes,
                 idx_bytes=idx_bytes, on_cpu=on_cpu, fused=fused,
+                sparse_rhs=sparse_rhs,
             )
             + perm_bytes
         )
     p = cand.param_dict
-    if cand.fmt == "csr":
+    if cand.fmt == "spmspv":
+        # Work-efficient SpMSpV (Azad-Buluc bucket scheme): traffic scales
+        # with the TOUCHED columns only — expected gathered products are
+        # x_density * nnz — never with nnz(A).  Streams: the CSC gather of
+        # touched (row, val) pairs, the expanded product stream's write +
+        # scatter read-back, the x coordinates with their column-table
+        # lookups, and the accumulator output.
+        density = min(max(float(feats.x_density), 0.0), 1.0)
+        touched = density * float(a.nnz)
+        bytes_ = (
+            3.0 * touched * (val_bytes + idx_bytes)
+            + density * n * (2 * idx_bytes + val_bytes)
+            + m * val_bytes
+        )
+    elif cand.fmt == "csr":
         bytes_ = (
             spmv_app_bytes(m, n, a.nnz, val_bytes, idx_bytes)
             if k == 1
@@ -409,6 +456,11 @@ def estimate_cost(
     else:  # pragma: no cover - enumeration and cost stay in sync
         raise ValueError(f"unknown candidate format: {cand.fmt}")
 
+    if sparse_rhs and cand.fmt != "spmspv":
+        # A dense-RHS tier serving a sparse request densifies first: one
+        # zeros-init + scatter pass over the operand vector.
+        bytes_ = float(bytes_) + n * val_bytes
+
     slowdown = 1.0
     if cand.impl == "scalar":
         slowdown = SCALAR_SLOWDOWN
@@ -421,7 +473,14 @@ def estimate_cost(
         # traffic on top of the kernel's streams.
         overhead = OVERHEAD_BYTES / SOLVER_STEP_AMORTIZE
         bytes_ = float(bytes_) + SOLVER_VEC_PASSES * m * k * val_bytes
-    return (float(bytes_) + overhead) * slowdown
+    cost = (float(bytes_) + overhead) * slowdown
+    if not math.isfinite(cost):
+        # Degenerate inputs (nnz = 0, poisoned features) must never hand a
+        # NaN to prune(): NaN loses every comparison silently, so the whole
+        # ranking would be garbage.  An infinite estimate simply loses, and
+        # prune()'s fallback still keeps a deterministic default.
+        return math.inf
+    return cost
 
 
 def prune(
@@ -430,9 +489,18 @@ def prune(
     """Keep candidates within ``factor`` of the cheapest estimate.
 
     The cheapest candidate always survives, so the measured search is never
-    left with an empty slate.
+    left with an empty slate.  Non-finite estimates never rank: when every
+    estimate is inf/NaN (a degenerate matrix poisoned the byte model) the
+    tuner falls back to ONE deterministic default — the baseline csr/vector
+    tier when enumerated — instead of silently comparing NaNs.
     """
     if not costs:
         return []
-    best = min(costs.values())
-    return [c for c, est in costs.items() if est <= factor * best]
+    finite = {c: est for c, est in costs.items() if math.isfinite(est)}
+    if not finite:
+        for c in costs:
+            if c.fmt == "csr" and c.impl == "vector":
+                return [c]
+        return [next(iter(costs))]
+    best = min(finite.values())
+    return [c for c, est in finite.items() if est <= factor * best]

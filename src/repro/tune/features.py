@@ -39,6 +39,11 @@ class MatrixFeatures:
     bandwidth: int  # max |i - j| over nonzeros
     x_bytes: int  # footprint of the dense operand (k columns)
     x_fits_vmem: bool
+    # Operand-density axis (PLAN_VERSION 6): nnz(x)/n for a sparse RHS, 1.0
+    # for the dense-RHS kinds.  Drives the spmspv byte branch — the tuner
+    # crosses over from dense-RHS tiers as x thins.  Trailing default keeps
+    # positional construction of the dense-kind features unchanged.
+    x_density: float = 1.0
 
     def to_dict(self) -> dict[str, Any]:
         """Plain-python dict, safe for JSON persistence inside a Plan.
@@ -73,6 +78,7 @@ FEATURE_NAMES = (
     "utd",
     "log_bandwidth",
     "x_fits_vmem",
+    "x_density",
 )
 
 
@@ -95,6 +101,9 @@ def feature_vector(
                 float(d["utd"]),
                 math.log10(float(d["bandwidth"]) + 1.0),
                 1.0 if d["x_fits_vmem"] else 0.0,
+                # Schema-additive default: every pre-v6 measurement was a
+                # dense-RHS one, so a missing key means x_density = 1.0.
+                float(d.get("x_density", 1.0)),
             ],
             dtype=np.float64,
         )
@@ -102,7 +111,15 @@ def feature_vector(
         return None
 
 
-def extract(a: CSRMatrix, *, k: int = 1, val_bytes: int = 4) -> MatrixFeatures:
+def extract(
+    a: CSRMatrix, *, k: int = 1, val_bytes: int = 4, x_nnz: int | None = None
+) -> MatrixFeatures:
+    """Structural features; ``x_nnz`` sets the sparse-RHS density axis.
+
+    Degenerate inputs (nnz = 0, all-empty rows, even m = 0) must come out
+    finite: every downstream consumer ranks by these numbers, and one NaN
+    here poisons the whole candidate ordering (see ``estimate_cost``).
+    """
     from repro.kernels.ops import VMEM_BUDGET_BYTES
 
     m, n = a.shape
@@ -110,6 +127,7 @@ def extract(a: CSRMatrix, *, k: int = 1, val_bytes: int = 4) -> MatrixFeatures:
     mean = float(lengths.mean()) if m else 0.0
     cv = float(lengths.std() / mean) if mean > 0 else 0.0
     x_bytes = int(n) * int(k) * val_bytes
+    x_density = 1.0 if x_nnz is None else min(max(int(x_nnz), 0) / max(int(n), 1), 1.0)
     return MatrixFeatures(
         m=m,
         n=n,
@@ -121,4 +139,5 @@ def extract(a: CSRMatrix, *, k: int = 1, val_bytes: int = 4) -> MatrixFeatures:
         bandwidth=matrix_bandwidth(a),
         x_bytes=x_bytes,
         x_fits_vmem=x_bytes <= VMEM_BUDGET_BYTES,
+        x_density=x_density,
     )

@@ -61,6 +61,7 @@ __all__ = [
     "prep_memo_stats",
     "runner",
     "solver_step_probe",
+    "sparse_rhs_runner",
 ]
 
 
@@ -137,6 +138,10 @@ def prepare(
         )
     if cand.fmt == "bcsr":
         return kops.bcsr_prepare(bcsr_from_csr(a, tuple(p["block"])))
+    if cand.fmt == "spmspv":
+        from repro.kernels.spmspv import spmspv_prepare
+
+        return spmspv_prepare(a)
     raise ValueError(f"unknown candidate format: {cand.fmt}")
 
 
@@ -367,6 +372,11 @@ def runner(
     from repro.kernels import ops as kops
 
     m, n = a.shape
+    if cand.fmt == "spmspv":
+        raise ValueError(
+            "spmspv candidates take a sparse operand — bind them through "
+            "sparse_rhs_runner(a, cand, prep, x_nnz=...) instead of runner()"
+        )
     if cand.fmt == "dist":
         from repro.core.distributed import mesh_spmm_runner
 
@@ -453,6 +463,44 @@ def runner(
     raise ValueError(f"unknown candidate format: {cand.fmt}")
 
 
+def sparse_rhs_runner(
+    a: CSRMatrix,
+    cand: Candidate,
+    prep: dict[str, Any],
+    *,
+    x_nnz: int,
+) -> Callable[[tuple], jax.Array]:
+    """Bind ANY candidate into ``fn((xi, xv)) -> y`` over a sparse RHS.
+
+    ``xi``/``xv`` are (x_nnz,) padded coordinate/value arrays (sentinel
+    index n, value 0 — see kernels.spmspv.pad_sparse_rhs).  ``fmt="spmspv"``
+    candidates dispatch the bucket kernel directly; every dense-RHS tier is
+    wrapped in an in-jit densify (``zeros(n).at[xi].add(xv)``, the sentinel
+    dropped by OOB-scatter semantics) ahead of its normal k=1 runner.  One
+    signature for the whole space is what lets the measured search time
+    dense and spmspv candidates on the SAME sparse operand — the crossover
+    is a measurement, not an API fork.
+    """
+    bucket = max(int(x_nnz), 1)
+    n = a.shape[1]
+    if cand.fmt == "spmspv":
+        from repro.kernels.spmspv import spmspv_bind
+
+        return spmspv_bind(prep, bucket, impl=cand.impl, **cand.param_dict)
+    base = runner(a, cand, prep, k=1)
+
+    @jax.jit
+    def densified(xi, xv):
+        x = jnp.zeros((n,), xv.dtype).at[xi].add(xv, mode="drop")
+        return base(x)
+
+    def fn(sx):
+        xi, xv = sx
+        return densified(xi, xv)
+
+    return fn
+
+
 # ---------------------------------------------------------------------------
 # The facade
 # ---------------------------------------------------------------------------
@@ -480,7 +528,13 @@ class SparseOperator:
         self.mesh = mesh
         self.axis = axis
         self._prep = prep
-        self._run = runner(a, plan.candidate, prep, k=plan.k, mesh=mesh, axis=axis)
+        if plan.kind == "spmspv":
+            # plan.k stores the x-nnz bucket; the runner takes (xi, xv).
+            self._run = sparse_rhs_runner(a, plan.candidate, prep, x_nnz=plan.k)
+        else:
+            self._run = runner(
+                a, plan.candidate, prep, k=plan.k, mesh=mesh, axis=axis
+            )
         self._csr_dev: dict | None = prep.get("dev")  # fallback path, lazy
         self._aot: dict = {}  # donate_rhs -> persistent compiled executable
         # Set by build_predicted: the tune.predict.Prediction that chose
@@ -507,10 +561,22 @@ class SparseOperator:
         seed: int = 0,
         race: bool = True,
         solver_step: bool = False,
+        x_nnz: int | None = None,
     ) -> "SparseOperator":
         """Autotune (or fetch the cached plan for) this matrix.
 
         k=None tunes SpMV; k=<width> tunes SpMM with a (n, k) operand.
+
+        ``x_nnz=<bucket>`` tunes for a *sparse* RHS instead
+        (kind="spmspv"): the space is the dense SpMV tiers (each timed
+        through a densify wrapper) plus the spmspv bucket kernels, all
+        measured on one random sparse operand with ``x_nnz`` nonzeros —
+        ``plan.k`` stores the bucket, so the cache keys sparse plans per
+        nnz(x) bucket exactly as it keys SpMM plans per k.  Serve with
+        ``op.apply_sparse(indices, values)`` (or ``op @ (indices,
+        values)``).  Mutually exclusive with ``k``/``solver_step``; device
+        meshes are not supported yet (distributed SpMSpV under the mesh
+        schedules is the ROADMAP follow-on).
 
         ``solver_step=True`` tunes at the *solver-step* level instead
         (kind="solver_step", the fused iterative-solver runtime's plans):
@@ -549,6 +615,20 @@ class SparseOperator:
         if solver_step:
             kind = "solver_step"
         kk = 1 if k is None else int(k)
+        if x_nnz is not None:
+            if k is not None or solver_step:
+                raise ValueError(
+                    "x_nnz= (sparse RHS) is mutually exclusive with "
+                    "k=/solver_step="
+                )
+            if mesh is not None:
+                raise NotImplementedError(
+                    "sparse RHS over a device mesh is not implemented yet: "
+                    "distributed SpMSpV under the mesh schedules is the "
+                    "ROADMAP follow-on of this tier"
+                )
+            kind = "spmspv"
+            kk = max(int(x_nnz), 1)  # plan.k carries the x-nnz bucket
         fp = fingerprint(a)
         backend = jax.default_backend()
         scale = [int(a.shape[0]), int(a.shape[1]), int(a.nnz)]
@@ -572,7 +652,12 @@ class SparseOperator:
                     axis=axis,
                 )
 
-        feats = extract(a, k=kk)
+        sparse_kind = kind == "spmspv"
+        feats = extract(
+            a,
+            k=1 if sparse_kind else kk,
+            x_nnz=kk if sparse_kind else None,
+        )
         if candidates is not None:
             cands = list(candidates)
         elif mesh is not None:
@@ -583,14 +668,31 @@ class SparseOperator:
                 reorders=REORDER_METHODS if include_reorder else (),
             )
         costs = {
-            c: estimate_cost(a, c, feats, k=kk, fused=solver_step)
+            c: estimate_cost(
+                a, c, feats, k=1 if sparse_kind else kk,
+                fused=solver_step, sparse_rhs=sparse_kind,
+            )
             for c in cands
         }
         survivors = prune(costs, factor=prune_factor)
 
         rng = np.random.default_rng(seed)
-        shape = (a.shape[1],) if kk == 1 else (a.shape[1], kk)
-        x = jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+        if sparse_kind:
+            # One random sparse operand probes every survivor — dense tiers
+            # time their densify wrapper on it, so the dense-vs-spmspv
+            # crossover is decided by measurement on equal terms.
+            from repro.kernels.spmspv import pad_sparse_rhs
+
+            n = a.shape[1]
+            nx = min(kk, n)
+            idx = np.sort(rng.choice(n, size=nx, replace=False)).astype(np.int64)
+            val = rng.standard_normal(nx).astype(np.float32)
+            # Host tuple: the spmspv runners pick the work bucket on
+            # host, so device operands would sync every timed rep.
+            x = pad_sparse_rhs(idx, val, kk, n)
+        else:
+            shape = (a.shape[1],) if kk == 1 else (a.shape[1], kk)
+            x = jnp.asarray(rng.standard_normal(shape).astype(np.float32))
 
         # Cheapest-estimate-first so racing establishes a credible best
         # early: every later candidate's first rep races against it.
@@ -606,7 +708,10 @@ class SparseOperator:
         for c in survivors:
             prep = prepare_cached(a, c, fp=fp, mesh=mesh, axis=axis,
                                   prep_cache=prep_cache)
-            fn = runner(a, c, prep, k=kk, mesh=mesh, axis=axis)
+            if sparse_kind:
+                fn = sparse_rhs_runner(a, c, prep, x_nnz=kk)
+            else:
+                fn = runner(a, c, prep, k=kk, mesh=mesh, axis=axis)
             if solver_step:  # time the fused composite, not the bare kernel
                 fn = solver_step_probe(fn, kk)
             abort = RACE_FACTOR * best[0] if (race and best is not None) else None
@@ -753,6 +858,11 @@ class SparseOperator:
         program is already persistent); for those the bound runner is
         returned as-is.
         """
+        if self.plan.kind == "spmspv":
+            # The sparse-RHS runner is already a persistent per-work-bucket
+            # dispatch (kernels.spmspv.spmspv_bind caches its jitted
+            # executables); donation does not apply to the coordinate pair.
+            return self._run
         if self.mesh is not None:
             if not donate_rhs:
                 return self._run  # already a persistent bound runner
@@ -782,7 +892,7 @@ class SparseOperator:
     @classmethod
     def from_candidate(
         cls, a: CSRMatrix, cand: Candidate, *, k: int | None = None,
-        donate_rhs: bool = False,
+        donate_rhs: bool = False, x_nnz: int | None = None,
     ) -> "SparseOperator":
         """Build with a forced candidate — no search, no cache.
 
@@ -792,11 +902,27 @@ class SparseOperator:
         ``build``.  ``donate_rhs=True`` pre-lowers the pinned candidate into
         a donation-enabled persistent executable (``op.aot`` with the same
         flag) so a pin is serving-ready without a second lowering step.
+
+        ``x_nnz=<bucket>`` pins for a sparse RHS (kind="spmspv", serve via
+        ``apply_sparse``); required for ``fmt="spmspv"`` candidates, and a
+        dense candidate pinned this way serves through its densify wrapper
+        — how fig16 pins the dense baseline on sparse operands.
         """
-        kk = 1 if k is None else int(k)
+        if x_nnz is not None and k is not None:
+            raise ValueError("x_nnz= is mutually exclusive with k=")
+        if cand.fmt == "spmspv" and x_nnz is None:
+            raise ValueError(
+                "spmspv candidates need x_nnz= (the sparse-RHS nnz bucket)"
+            )
+        if x_nnz is not None:
+            kind = "spmspv"
+            kk = max(int(x_nnz), 1)
+        else:
+            kk = 1 if k is None else int(k)
+            kind = "spmv" if kk == 1 else "spmm"
         plan = Plan(
             fingerprint=fingerprint(a),
-            kind="spmv" if kk == 1 else "spmm",
+            kind=kind,
             fmt=cand.fmt,
             impl=cand.impl,
             params={kp: list(v) if isinstance(v, tuple) else v
@@ -848,8 +974,39 @@ class SparseOperator:
         return table
 
     # -- application --------------------------------------------------------
-    def __matmul__(self, x: jax.Array) -> jax.Array:
+    def apply_sparse(self, indices, values) -> jax.Array:
+        """y = A x for a sparse x given as sorted ``(indices, values)``.
+
+        Only spmspv-kind operators (built with ``x_nnz=``) accept sparse
+        operands; coordinates are validated loudly (bounds, strictly
+        increasing — see kernels.spmspv.validate_sparse_rhs) and padded to
+        the plan's nnz bucket.  More nonzeros than the bucket is an error —
+        build a wider bucket, or let the engine's ``submit_sparse`` pick it.
+        """
+        if self.plan.kind != "spmspv":
+            raise ValueError(
+                "apply_sparse needs an operator built for sparse RHS "
+                "(SparseOperator.build(a, x_nnz=...)); this plan is kind="
+                f"{self.plan.kind!r}.  For a dense x use op @ x."
+            )
+        from repro.kernels.spmspv import pad_sparse_rhs, validate_sparse_rhs
+
+        n = self.shape[1]
+        idx, val = validate_sparse_rhs(indices, values, n)
+        # Host tuple: the spmspv runner reads xi on host for the work
+        # bucket; device operands here would sync per call.
+        return self._run(pad_sparse_rhs(idx, val, self.plan.k, n))
+
+    def __matmul__(self, x) -> jax.Array:
+        if isinstance(x, tuple):  # sparse RHS as (indices, values)
+            return self.apply_sparse(*x)
         x = jnp.asarray(x)
+        if self.plan.kind == "spmspv":
+            # Dense operand on a sparse-RHS plan: plan.k is an nnz bucket,
+            # not an SpMM width — serve through the CSR fallback
+            # (documented), same as a k-mismatched dense plan.
+            fn = spmv_csr if x.ndim == 1 else spmm_csr
+            return fn(self._csr_fallback(), x, n_rows=self.shape[0])
         if x.ndim == 1:
             if self.plan.k == 1:
                 return self._run(x)

@@ -49,7 +49,11 @@ __all__ = ["PLAN_VERSION", "Plan", "PlanCache", "fingerprint", "default_cache"]
 # dispatch constant amortizes over a while_loop's iterations and axpy/dot
 # traffic enters the estimate), which moves the crossover pruning sees for
 # every kind sharing the model's constants — pre-v5 plans are re-searched.
-PLAN_VERSION = 5
+# v6: the spmspv tier (sparse RHS) joined the space and features grew the
+# x-density axis that its byte branch ranks on — the dense tiers now pay a
+# densify term under sparse-RHS kinds, so what an old plan would have
+# picked changes; pre-v6 plans are dropped at load and re-searched.
+PLAN_VERSION = 6
 
 _ENV_CACHE = "REPRO_TUNE_CACHE"
 _DEFAULT_CACHE = "~/.cache/repro_tune/plans.json"

@@ -2,6 +2,7 @@
 padding, plan-table cache round-trip, shard dispatch, and queue edge cases."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.distributed import assemble_rows, stacked_spmm
 from repro.core.formats import csr_from_dense
@@ -340,3 +341,70 @@ def test_submit_strict_dtype_raises_instead_of_casting():
     r = eng.submit(np.zeros(a.shape[1], np.float32))
     eng.drain()
     assert r.done and r.y.dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# PR 8: sparse-RHS serving (submit_sparse)
+# ---------------------------------------------------------------------------
+def test_submit_sparse_matches_dense_oracle_and_buckets_by_nnz():
+    d, a = small(seed=70)
+    eng = engine(a, ks=(1,), x_nnz_buckets=(4, 16))
+    rng = np.random.default_rng(71)
+    idx = np.sort(rng.choice(128, size=3, replace=False)).astype(np.int64)
+    val = rng.standard_normal(3).astype(np.float32)
+    x_dense = np.zeros(128, np.float32)
+    x_dense[idx] = val
+    fut = eng.submit_sparse(idx, val)
+    eng.drain()
+    np.testing.assert_allclose(
+        np.asarray(fut.result()), d @ x_dense, atol=1e-4
+    )
+    # nnz=3 rounds up to the 4-bucket; stats record the sparse lane apart
+    # from the dense k-buckets.
+    s = eng.stats.summary()
+    assert s["sparse_by_bucket"] == {"spmspv4": 1}
+
+
+def test_submit_sparse_oversize_falls_back_to_densify():
+    d, a = small(seed=72)
+    eng = engine(a, ks=(1,), x_nnz_buckets=(4,))
+    rng = np.random.default_rng(73)
+    idx = np.sort(rng.choice(128, size=9, replace=False)).astype(np.int64)
+    val = rng.standard_normal(9).astype(np.float32)
+    x_dense = np.zeros(128, np.float32)
+    x_dense[idx] = val
+    fut = eng.submit_sparse(idx, val)  # nnz=9 > largest bucket 4
+    eng.drain()
+    np.testing.assert_allclose(
+        np.asarray(fut.result()), d @ x_dense, atol=1e-4
+    )
+    s = eng.stats.summary()
+    assert s["sparse_by_bucket"] == {}  # served by the dense k=1 lane
+    assert s["by_bucket"] == {1: 1}
+
+
+def test_submit_sparse_rejects_bad_indices_loudly():
+    _, a = small(seed=74)
+    eng = engine(a, ks=(1,), x_nnz_buckets=(8,))
+    val2 = np.ones(2, np.float32)
+    with pytest.raises(ValueError, match="outside"):
+        eng.submit_sparse(np.array([0, 128], np.int64), val2)
+    with pytest.raises(ValueError, match="strictly increasing"):
+        eng.submit_sparse(np.array([5, 2], np.int64), val2)
+    with pytest.raises(ValueError, match="strictly increasing"):  # duplicates
+        eng.submit_sparse(np.array([3, 3], np.int64), val2)
+    with pytest.raises(ValueError, match="integer"):
+        eng.submit_sparse(np.array([0.0, 1.0]), val2)
+    with pytest.raises(ValueError, match="1-D"):
+        eng.submit_sparse(np.array([[0, 1]], np.int64), val2)
+    with pytest.raises(ValueError, match="same length"):
+        eng.submit_sparse(np.array([0, 1], np.int64), np.ones(3, np.float32))
+
+
+def test_submit_sparse_strict_dtype_raises_instead_of_casting():
+    _, a = small(seed=75)
+    eng = engine(a, ks=(1,), x_nnz_buckets=(8,), strict_dtype=True)
+    with pytest.raises(TypeError, match="float32"):
+        eng.submit_sparse(
+            np.array([1, 2], np.int64), np.ones(2, np.float64)
+        )

@@ -1,0 +1,117 @@
+"""MoE capacity / combine tests (the file moe.py's docstring points at).
+
+Covers the PR-8 bugfix surface: capacity must be ceil (the old floor
+silently dropped tokens at fractional loads), the combine step is literally
+a CSR SpMM, and ``moe_apply_spmspv`` — the combine served through the
+``fmt="spmspv"`` sparse tier — matches both ``moe_apply`` (exactly, drops
+and all, since they share dispatch) and the dense oracle.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import csr_from_coo, spmm_csr
+from repro.models.common import KeyGen, split_params
+from repro.models.moe import (
+    MoEConfig,
+    _dispatch_expert_outputs,
+    moe_apply,
+    moe_apply_dense_ref,
+    moe_apply_spmspv,
+    moe_capacity,
+    moe_init,
+)
+
+# s=8, k=2, E=4, cf=1.875: exact capacity 7.5.  floor kept 7 slots for a
+# worst-case per-expert load of 8 — the shape where the old bug dropped a
+# token the config said should be kept.
+FRACTIONAL = MoEConfig(n_experts=4, top_k=2, d_ff=16, capacity_factor=1.875)
+
+
+def _concentrated_params(d_model: int, cfg: MoEConfig, seed: int = 0):
+    """Params whose router sends every token to experts 0 and 1, so each
+    of those experts sees the full s*... load and capacity binds."""
+    p, _ = split_params(moe_init(KeyGen(seed), d_model, cfg))
+    r = np.zeros((d_model, cfg.n_experts), np.float32)
+    r[:, 0] = 1.0
+    r[:, 1] = 0.9
+    p = dict(p)
+    p["router"] = jnp.asarray(r)
+    return p
+
+
+def test_capacity_is_ceil():
+    assert moe_capacity(8, FRACTIONAL) == 8  # ceil(7.5), floor gave 7
+    assert math.floor(8 * 2 * 1.875 / 4) == 7  # the shape is fractional
+    # exact divisions unchanged, and the >= 1 floor holds
+    assert moe_capacity(16, MoEConfig(4, 2, 16, capacity_factor=1.0)) == 8
+    assert moe_capacity(1, MoEConfig(64, 1, 16, capacity_factor=0.01)) == 1
+
+
+def test_ceil_capacity_keeps_fractional_load():
+    """Regression for the floor-capacity bug: at the floor != ceil shape
+    with routing concentrated on two experts, every token must survive —
+    moe_apply == the no-dropping dense oracle.  Under floor capacity one
+    token per expert overflowed and this comparison failed."""
+    d_model = 12
+    p = _concentrated_params(d_model, FRACTIONAL)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, d_model), jnp.float32)
+    y, aux = moe_apply(p, x, FRACTIONAL)
+    y_ref = moe_apply_dense_ref(p, x, FRACTIONAL)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-5)
+    assert np.isfinite(float(aux))
+
+
+def test_combine_is_a_spmm():
+    """The combine is a literal SpMM: per batch row, the (tokens x slots)
+    weight matrix built from the kept (dest, weight) pairs times the
+    expert-output buffer reproduces moe_apply's output."""
+    d_model = 16
+    cfg = MoEConfig(n_experts=4, top_k=2, d_ff=16, capacity_factor=8.0)
+    p, _ = split_params(moe_init(KeyGen(4), d_model, cfg))
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 8, d_model), jnp.float32)
+    b, s, k, E = 2, 8, cfg.top_k, cfg.n_experts
+    out_flat, dest, weights, _, _, C = _dispatch_expert_outputs(p, x, cfg)
+    dest_np = np.asarray(dest).reshape(b, s, k)
+    w_np = np.asarray(weights).reshape(b, s, k)
+    y, _ = moe_apply(p, x, cfg)
+    for bi in range(b):
+        rows, cols, vals = [], [], []
+        for t in range(s):
+            for j in range(k):
+                if dest_np[bi, t, j] < E * C:  # dropped slots contribute 0
+                    rows.append(t)
+                    cols.append(int(dest_np[bi, t, j]))
+                    vals.append(float(w_np[bi, t, j]))
+        combine = csr_from_coo((s, E * C + 1), rows, cols, vals)
+        got = spmm_csr(combine.device(), out_flat[bi], n_rows=s)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(y[bi]), atol=1e-5
+        )
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_moe_apply_spmspv_matches_dense_ref(impl):
+    """Combine through the spmspv tier == dense oracle at high capacity."""
+    d_model = 12
+    cfg = MoEConfig(n_experts=4, top_k=2, d_ff=16, capacity_factor=4.0)
+    p, _ = split_params(moe_init(KeyGen(6), d_model, cfg))
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 6, d_model), jnp.float32)
+    y_sp = moe_apply_spmspv(p, x, cfg, impl=impl)
+    y_ref = moe_apply_dense_ref(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y_sp), np.asarray(y_ref), atol=1e-5)
+
+
+def test_moe_apply_spmspv_matches_moe_apply_under_drops():
+    """The two combines share _dispatch_expert_outputs, so they must agree
+    exactly even when capacity drops tokens (cf=1.0, concentrated router)."""
+    d_model = 12
+    cfg = MoEConfig(n_experts=4, top_k=2, d_ff=16, capacity_factor=1.0)
+    p = _concentrated_params(d_model, cfg, seed=8)
+    x = jax.random.normal(jax.random.PRNGKey(9), (1, 8, d_model), jnp.float32)
+    y, _ = moe_apply(p, x, cfg)
+    y_sp = moe_apply_spmspv(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y_sp), np.asarray(y), atol=1e-5)

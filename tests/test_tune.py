@@ -147,6 +147,87 @@ def test_operator_matches_oracle_for_every_spmm_candidate():
         np.testing.assert_allclose(got, ref, atol=5e-3, err_msg=cand.key())
 
 
+def test_operator_matches_oracle_for_every_spmspv_candidate():
+    """Every candidate in the sparse-RHS space — the spmspv tier AND the
+    densify-wrapped dense tiers it competes with — matches the dense
+    oracle on the same sparse operand."""
+    d, a = small_csr(seed=51, m=100, n=80, density=0.1)  # non-square
+    rng = np.random.default_rng(52)
+    nx = 6
+    idx = np.sort(rng.choice(80, size=nx, replace=False)).astype(np.int64)
+    val = rng.standard_normal(nx).astype(np.float32)
+    x_dense = np.zeros(80, np.float32)
+    x_dense[idx] = val
+    ref = d @ x_dense
+    cands = enumerate_candidates(extract(a, x_nnz=nx), kind="spmspv")
+    assert any(c.fmt == "spmspv" for c in cands)
+    assert any(c.fmt != "spmspv" for c in cands)  # dense tiers compete too
+    for cand in cands:
+        op = SparseOperator.from_candidate(a, cand, x_nnz=nx)
+        got = np.asarray(op.apply_sparse(idx, val))
+        np.testing.assert_allclose(got, ref, atol=2e-3, err_msg=cand.key())
+        # tuple dispatch through @ is the same path
+        got2 = np.asarray(op @ (idx, val))
+        np.testing.assert_allclose(got2, ref, atol=2e-3, err_msg=cand.key())
+
+
+def test_spmspv_cost_model_crosses_over_with_density():
+    """The byte model must prefer spmspv as x thins and the dense-RHS tiers
+    as x fills — the measured search then only confirms the ranking."""
+    from repro.tune.candidates import make
+    from repro.tune.features import MatrixFeatures
+
+    _, a = small_csr(seed=53, m=1024, n=1024, density=0.05)
+    base = extract(a)
+    spmspv = make("spmspv", "ref")
+    csr = make("csr", "vector")
+
+    import dataclasses
+
+    thin = dataclasses.replace(base, x_density=0.001)
+    full = dataclasses.replace(base, x_density=1.0)
+    assert estimate_cost(a, spmspv, thin, sparse_rhs=True) < estimate_cost(
+        a, csr, thin, sparse_rhs=True
+    )
+    assert estimate_cost(a, spmspv, full, sparse_rhs=True) > estimate_cost(
+        a, csr, full, sparse_rhs=True
+    )
+    assert isinstance(base, MatrixFeatures)  # x_density rides the features
+
+
+def test_spmspv_build_persists_plan_and_reloads(tmp_path):
+    """build(x_nnz=B) is a measured search over the mixed space; the winning
+    plan persists under kind="spmspv" keyed by the nnz bucket and a second
+    build serves it from cache."""
+    _, a = small_csr(seed=54)
+    cache = PlanCache(tmp_path / "plans.json")
+    op = SparseOperator.build(a, x_nnz=8, cache=cache, warmup=0, timed=1)
+    assert op.plan.kind == "spmspv" and op.plan.k == 8
+    assert not op.from_cache
+    again = SparseOperator.build(
+        a, x_nnz=8, cache=PlanCache(tmp_path / "plans.json")
+    )
+    assert again.from_cache and again.plan.candidate.key() == (
+        op.plan.candidate.key()
+    )
+
+
+def test_feature_vector_has_x_density_axis_with_default():
+    """PLAN_VERSION-6 feature schema: x_density is the trailing axis and
+    dicts persisted before the axis existed default to dense (1.0)."""
+    from repro.tune.features import FEATURE_NAMES, feature_vector
+
+    assert FEATURE_NAMES[-1] == "x_density"
+    _, a = small_csr(seed=55)
+    feats = extract(a, x_nnz=12)
+    d = feats.to_dict()
+    assert d["x_density"] == pytest.approx(12 / 96)
+    v = feature_vector(d)
+    assert len(v) == len(FEATURE_NAMES)
+    legacy = {k: val for k, val in d.items() if k != "x_density"}
+    assert feature_vector(legacy)[-1] == 1.0
+
+
 def test_rcm_candidates_enumerated_and_oracle_correct():
     """reorders=("rcm",) doubles the non-scalar space with permuted variants
     (square matrices only), and every reordered candidate matches the dense
@@ -373,33 +454,33 @@ def test_time_fn_env_rep_floor(monkeypatch):
     assert len(calls) == 4  # bad value ignored
 
 
-def test_plan_version_5_drops_v4_entries_and_rebuilds(tmp_path):
-    """Acceptance: the v5 bump (solver_step kind + fused byte model moving
-    the shared cost constants' crossover) must drop v4-era entries at load —
-    they were picked under the old model — and a fresh build repopulates the
-    file at the current version."""
+def test_plan_version_6_drops_v5_entries_and_rebuilds(tmp_path):
+    """Acceptance: the v6 bump (spmspv tier + x-density feature axis +
+    densify term under sparse-RHS kinds) must drop v5-era entries at load —
+    they were picked from a smaller space under the old model — and a fresh
+    build repopulates the file at the current version."""
     import json
 
     from repro.tune import PLAN_VERSION
 
-    assert PLAN_VERSION == 5
+    assert PLAN_VERSION == 6
     _, a = small_csr(seed=23)
     fp = fingerprint(a)
     path = tmp_path / "plans.json"
-    v4_entry = {  # PR-4/5 schema: merge tier present, predates solver_step
+    v5_entry = {  # PR-6/7 schema: solver_step present, predates spmspv
         "fingerprint": fp, "kind": "spmv", "fmt": "csr", "impl": "vector",
         "params": {}, "est_cost": 1.0, "measured_s": 1e-4,
         "n_candidates": 5, "n_measured": 3, "k": 1, "backend": "cpu",
         "scale": [a.shape[0], a.shape[1], a.nnz], "mesh_shape": [],
-        "n_raced": 0, "version": 4,
+        "n_raced": 0, "version": 5,
     }
-    path.write_text(json.dumps({f"{fp}:spmv:k1": v4_entry}))
+    path.write_text(json.dumps({f"{fp}:spmv:k1": v5_entry}))
     cache = PlanCache(path)
     assert len(cache) == 0 and cache.get(fp, "spmv", 1) is None
     op = SparseOperator.build(a, cache=cache, warmup=0, timed=1)
     assert not op.from_cache  # stale plan re-searched, not served
     on_disk = json.loads(path.read_text())
-    assert all(e.get("version") == 5 for e in on_disk.values())
+    assert all(e.get("version") == 6 for e in on_disk.values())
     # Restarted process reloads the rebuilt table without searching.
     assert SparseOperator.build(a, cache=PlanCache(path)).from_cache
 
