@@ -1,0 +1,408 @@
+"""Chaos drill: fault injection, degraded serving, repair, tenant isolation.
+
+Not a figure from the paper — it closes the paper's serving story under
+FAILURE.  The paper's central finding (the best kernel is per-matrix; the
+gap to a safe baseline is performance, not correctness) is what makes
+degraded-mode serving possible at all: when the tuned executable breaks,
+``csr/vector`` and the independently written ``sell/ref`` tier still
+compute the same y = A @ x.  This drill injects every fault class the
+runtime supervises (``runtime.faults`` sites) and gates four claims:
+
+**A. No hung futures + degraded correctness.**  For each fault class —
+``engine.dispatch`` (the bucket executable raises at launch) and
+``engine.nan`` (a poisoned operand caught by the opt-in on-device finite
+guard) — a burst is served while the fault storm consumes the engine's
+retry budget and demotes the bucket down the fallback chain.  The gate
+asserts every future resolves (result or exception, never a hang), and
+that the degraded-mode answers match the float64 dense oracle at 1e-5 —
+degradation costs throughput, never correctness.
+
+**B. Demote -> repair -> re-promote.**  After each storm passes, the
+engine's background repair thread probes the saved tuned executable and
+re-promotes it through the PR-7 ``hot_swap`` machinery.  The gate asserts
+at least one re-promotion is observed and post-swap serving matches the
+oracle: a transient fault is a transient cost.
+
+**C. Persistent failure propagates.**  A storm outlasting the whole
+fallback chain must FAIL the batch's futures (``InjectedFault`` out of
+``result()``), and the next batch after the storm serves normally — FIFO
+holds for survivors.
+
+**D. Tenant isolation under a fault storm.**  Two fleet tenants; the
+faulty one's storm is context-matched (``engine=bad``) so only its engine
+fails.  The gate asserts the healthy tenant's p99 stays inside its
+``max_wait_s`` SLO budget (fig18's budget: SLO + bounded service quanta)
+while the faulty tenant trips its circuit breaker (>= 1 quarantine) and
+every one of its futures resolves.
+
+Plus two library-level drills: a TORN plan cache (``plan_cache.read``) is
+quarantined to ``<path>.corrupt-<ts>`` and serving re-searches; a retune
+raise (``fleet.retune``) is retried with capped backoff and surfaced in
+``FleetStats``; an injected ``prepare.oom`` skips the candidate, not the
+search.
+
+``--json PATH`` writes ``BENCH_chaos.json`` (before the asserts, so CI
+keeps the trajectory through a regression).  Run standalone:
+
+  PYTHONPATH=src python -m benchmarks.fig19_chaos [--smoke] [--json F]
+"""
+import glob
+import json
+import os
+import time
+import warnings
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.engine import SparseEngine
+from repro.runtime.faults import FaultPlan, InjectedFault
+from repro.runtime.fleet import CircuitOpenError, SparseFleet
+from repro.runtime.supervisor import Supervisor
+from repro.tune import PlanCache, SparseOperator, time_fn
+
+from .common import row, suite
+
+SCALE = 1 / 64
+ORACLE_TOL = 1e-5  # degraded-mode answers vs the float64 dense oracle
+REPAIR_TIMEOUT_S = 30.0  # background re-promotion must land within this
+SEARCH_KW = dict(warmup=0, timed=1)  # chaos measures policy, not kernels
+# Zero-backoff supervisor: the drill exercises the retry/demote/repair
+# *policy*; real deployments keep the default capped exponential backoff.
+SUP_KW = dict(backoff_base_s=0.0, backoff_cap_s=0.0, repair_interval_s=0.005)
+
+
+def _dense64(a) -> np.ndarray:
+    """Float64 dense oracle of a CSR matrix."""
+    import scipy.sparse as sp
+
+    return (
+        sp.csr_matrix(
+            (np.asarray(a.data), np.asarray(a.indices), np.asarray(a.indptr)),
+            shape=a.shape,
+        )
+        .toarray()
+        .astype(np.float64)
+    )
+
+
+def _xs(rng, n: int, count: int) -> list:
+    return [
+        jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        for _ in range(count)
+    ]
+
+
+def _serve_all(eng, xs) -> list:
+    reqs = [eng.submit(x) for x in xs]
+    eng.drain()
+    return reqs
+
+
+def _wait_promotion(eng, timeout: float = REPAIR_TIMEOUT_S) -> bool:
+    deadline = time.perf_counter() + timeout
+    while time.perf_counter() < deadline:
+        if eng.supervisor.promotions >= 1:
+            return True
+        time.sleep(0.005)
+    return False
+
+
+def main(lines: list, *, smoke: bool = False, json_path: str | None = None):
+    scale = 1 / 256 if smoke else SCALE
+    mats = suite(scale)
+    a = mats["cant"]
+    dense = _dense64(a)
+    rng = np.random.default_rng(0)
+    n = a.shape[1]
+    report: dict = {"engine": {}, "fleet": {}, "library": {}}
+
+    # ---- A + B: per fault class — degrade, serve correctly, re-promote ----
+    for cls, site in (("dispatch", "engine.dispatch"), ("nan", "engine.nan")):
+        # n=2 fires with a zero-retry budget: the tuned tier and csr/vector
+        # each eat one fault, the batch completes on sell/ref (2 demotions),
+        # then the storm is spent and repair re-promotes the tuned table.
+        plan = FaultPlan({site: {"n": 2}})
+        eng = SparseEngine(
+            a, ks=(1, 4), cache=PlanCache(), faults=plan, nan_guard=True,
+            supervisor=Supervisor(max_retries=0, **SUP_KW), **SEARCH_KW,
+        )
+        xs = _xs(rng, n, 4)
+        t0 = time.perf_counter()
+        reqs = _serve_all(eng, xs)
+        t_storm = time.perf_counter() - t0
+        hung = sum(1 for r in reqs if not r.done)
+        failed = sum(1 for r in reqs if r.failed)
+        err = 0.0
+        for r in reqs:
+            y = np.asarray(r.result(), np.float64)
+            ref = dense @ np.asarray(r.x, np.float64)
+            err = max(err, float(np.max(np.abs(y - ref))))
+        promoted = _wait_promotion(eng)
+        # The staged tuned table is adopted at the next dispatch boundary;
+        # serve one more burst across the swap and recheck the oracle.
+        reqs2 = _serve_all(eng, _xs(rng, n, 4))
+        err2 = max(
+            float(
+                np.max(
+                    np.abs(
+                        np.asarray(r.result(), np.float64)
+                        - dense @ np.asarray(r.x, np.float64)
+                    )
+                )
+            )
+            for r in reqs2
+        )
+        entry = {
+            "fires": plan.fired(site),
+            "hung_futures": hung,
+            "failed_requests": failed,
+            "demotions": eng.stats.demotions,
+            "promotions": eng.supervisor.promotions,
+            "repromoted": promoted,
+            "swaps_applied": eng.swaps_applied,
+            "max_abs_err_degraded": err,
+            "max_abs_err_postswap": err2,
+            "storm_serve_s": round(t_storm, 4),
+        }
+        eng.close()
+        report["engine"][cls] = entry
+        lines.append(row(
+            f"fig19_{cls}_storm", t_storm,
+            f"demotions={entry['demotions']};repromoted={promoted};"
+            f"err={err:.1e}"))
+
+    # ---- C: persistent fault — futures FAIL, survivors keep FIFO ----------
+    plan = FaultPlan({"engine.dispatch": {"n": 3}})
+    eng = SparseEngine(
+        a, ks=(4,), cache=PlanCache(), faults=plan,
+        supervisor=Supervisor(max_retries=0, **SUP_KW), **SEARCH_KW,
+    )
+    doomed = [eng.submit(x) for x in _xs(rng, n, 4)]
+    eng.drain()  # all three tiers eat a fault: the batch is abandoned
+    n_exc = sum(
+        1 for r in doomed if r.failed and isinstance(r._exc, InjectedFault)
+    )
+    survivors = _serve_all(eng, _xs(rng, n, 4))  # storm spent: serves fine
+    err_surv = max(
+        float(
+            np.max(
+                np.abs(
+                    np.asarray(r.result(), np.float64)
+                    - dense @ np.asarray(r.x, np.float64)
+                )
+            )
+        )
+        for r in survivors
+    )
+    report["engine"]["persistent"] = {
+        "doomed": len(doomed),
+        "failed_with_injected": n_exc,
+        "hung_futures": sum(1 for r in doomed + survivors if not r.done),
+        "survivor_max_abs_err": err_surv,
+    }
+    eng.close()
+    lines.append(row(
+        "fig19_persistent", 0.0,
+        f"failed={n_exc}/{len(doomed)};survivor_err={err_surv:.1e}"))
+
+    # ---- D: fleet — healthy tenant SLO during a faulty tenant's storm -----
+    a_good = mats["shallow_water1"]
+    dense_good = _dense64(a_good)
+    slo = 0.02 if smoke else 0.05
+    storm = FaultPlan({"engine.dispatch": {"n": 10_000, "engine": "bad"}})
+    fleet = SparseFleet(
+        ks=(1, 4), cache=PlanCache(), retune=False, faults=storm,
+        breaker_threshold=2, breaker_reset_s=0.25,
+        supervisor_kwargs=dict(max_retries=0, **SUP_KW),
+    )
+    fleet.add_tenant("good", a_good, max_wait_s=slo)
+    fleet.add_tenant("bad", a, max_wait_s=None)
+    xg = _xs(rng, a_good.shape[1], 8)
+    xb = _xs(rng, n, 8)
+    # One service quantum of the healthy tenant's widest bucket — the unit
+    # the SLO budget may slip by (fig18's budget formula).
+    op4 = fleet.tenants["good"].engine.ops[4]
+    x4 = jnp.stack(xg[:4], axis=1)
+    t_heavy = time_fn(op4._run, x4, warmup=1, timed=3)
+
+    def good_p99(with_storm: bool) -> float:
+        lats = []
+        bad_reqs = []
+        for j in range(16 if smoke else 32):
+            if with_storm:
+                for b in range(4):
+                    try:
+                        bad_reqs.append(fleet.submit("bad", xb[(4 * j + b) % 8]))
+                    except CircuitOpenError:
+                        break  # breaker open: fails fast, as designed
+            r = fleet.submit("good", xg[j % len(xg)])
+            while r._ys is None:
+                if fleet.step() == 0:
+                    fleet.flush()
+            lats.append(r.latency_s)
+        fleet.drain()
+        return float(np.quantile(np.asarray(lats), 0.99)), bad_reqs
+
+    good_p99(False)  # compile both tenants outside the measured passes
+    p99_solo, _ = good_p99(False)
+    p99_storm, bad_reqs = good_p99(True)
+    budget = slo + 8 * t_heavy + 4 * p99_solo
+    r_check = fleet.submit("good", xg[0])
+    fleet.drain()
+    err_good = float(
+        np.max(
+            np.abs(
+                np.asarray(r_check.result(), np.float64)
+                - dense_good @ np.asarray(r_check.x, np.float64)
+            )
+        )
+    )
+    report["fleet"] = {
+        "slo_s": slo,
+        "service_quantum_s": round(t_heavy, 6),
+        "p99_solo_s": round(p99_solo, 5),
+        "p99_storm_s": round(p99_storm, 5),
+        "budget_s": round(budget, 5),
+        "quarantines": fleet.stats().quarantines,
+        "bad_submitted": len(bad_reqs),
+        "bad_unresolved": sum(1 for r in bad_reqs if not r.done),
+        "good_max_abs_err": err_good,
+    }
+    fleet.close()
+    lines.append(row(
+        "fig19_storm_p99", p99_storm,
+        f"solo_p99_s={p99_solo:.4f};budget_s={budget:.4f};"
+        f"quarantines={report['fleet']['quarantines']}"))
+
+    # ---- library drills: torn cache, retune raise, prepare OOM ------------
+    # Torn plan cache: the read site truncates the JSON; the load must
+    # quarantine the file (evidence preserved), warn once, and serve on.
+    cache_dir = Path(json_path).parent if json_path else Path(".")
+    cache_path = cache_dir / "chaos_plans.json"
+    for f in glob.glob(f"{cache_path}*"):
+        os.unlink(f)
+    seed_cache = PlanCache(cache_path)
+    SparseOperator.build(a, cache=seed_cache, **SEARCH_KW)
+    torn = FaultPlan({"plan_cache.read": {"n": 1}}, seed=3)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        reread = PlanCache(cache_path, faults=torn)
+    quarantined = glob.glob(f"{cache_path}.corrupt-*")
+    table_after_tear = len(reread)
+    SparseOperator.build(a, cache=reread, **SEARCH_KW)  # re-search + persist
+    report["library"]["plan_cache"] = {
+        "torn_reads": torn.fired("plan_cache.read"),
+        "table_after_tear": table_after_tear,
+        "quarantined_files": len(quarantined),
+        "warned": sum("quarantined" in str(w.message) for w in caught),
+        "reloaded_plans": len(PlanCache(cache_path)),
+    }
+    for f in glob.glob(f"{cache_path}*"):
+        os.unlink(f)
+
+    # Retune raise: two injected failures, retried with capped backoff —
+    # the third attempt lands and every error is surfaced in FleetStats.
+    retune_plan = FaultPlan({"fleet.retune": {"n": 2}})
+    fleet2 = SparseFleet(
+        ks=(1, 4), cache=PlanCache(), faults=retune_plan,
+        retune_max_retries=2, retune_backoff_s=0.001,
+        retune_kwargs=SEARCH_KW,
+    )
+    fleet2.add_tenant("t", mats["scircuit"])
+    fleet2.wait_retunes(timeout=600)
+    s2 = fleet2.stats().summary()
+    report["library"]["retune"] = {
+        k: s2[k]
+        for k in ("retune_errors", "retunes_done", "retunes_failed",
+                  "last_retune_error")
+    }
+    fleet2.close()
+
+    # Prepare OOM: one candidate's preparation raises MemoryError mid-
+    # search; it is marked lost (inf) and the search still picks a winner.
+    from repro.runtime.faults import set_active
+    from repro.tune import evict_prepared, fingerprint
+
+    oom = FaultPlan({"prepare.oom": {"n": 1}})
+    prev = set_active(oom)
+    try:
+        evict_prepared(fingerprint(a))
+        op = SparseOperator.build(
+            a, cache=PlanCache(), force_search=True, **SEARCH_KW
+        )
+        report["library"]["prepare_oom"] = {
+            "fires": oom.fired("prepare.oom"),
+            "winner": op.plan.candidate.key(),
+            "inf_marked": sum(
+                1 for v in op.measurements.values() if v == float("inf")
+            ),
+        }
+    finally:
+        set_active(prev)
+    lines.append(row(
+        "fig19_library", 0.0,
+        f"torn={report['library']['plan_cache']['torn_reads']};"
+        f"retune_errors={report['library']['retune']['retune_errors']};"
+        f"oom_fires={report['library']['prepare_oom']['fires']}"))
+
+    if json_path:  # written before the asserts: CI keeps the trajectory
+        Path(json_path).write_text(json.dumps(report, indent=1, sort_keys=True))
+
+    if smoke:
+        for cls in ("dispatch", "nan"):
+            e = report["engine"][cls]
+            assert e["hung_futures"] == 0, f"{cls}: hung futures {e}"
+            assert e["failed_requests"] == 0, (
+                f"{cls}: storm should degrade, not fail: {e}")
+            assert e["demotions"] >= 1, f"{cls}: no demotion observed: {e}"
+            assert e["max_abs_err_degraded"] <= ORACLE_TOL, (
+                f"{cls}: degraded answers off the dense oracle: {e}")
+            assert e["repromoted"] and e["promotions"] >= 1, (
+                f"{cls}: no re-promotion within {REPAIR_TIMEOUT_S}s: {e}")
+            assert e["max_abs_err_postswap"] <= ORACLE_TOL, (
+                f"{cls}: post-swap answers off the dense oracle: {e}")
+        p = report["engine"]["persistent"]
+        assert p["failed_with_injected"] == p["doomed"], (
+            f"persistent storm must fail every future with the injected "
+            f"exception: {p}")
+        assert p["hung_futures"] == 0, f"hung futures: {p}"
+        assert p["survivor_max_abs_err"] <= ORACLE_TOL, (
+            f"post-storm serving off the oracle: {p}")
+        f = report["fleet"]
+        assert f["p99_storm_s"] <= f["budget_s"], (
+            f"faulty tenant's storm broke the healthy tenant's SLO: "
+            f"p99 {f['p99_storm_s'] * 1e3:.1f}ms > "
+            f"budget {f['budget_s'] * 1e3:.1f}ms")
+        assert f["quarantines"] >= 1, f"breaker never opened: {f}"
+        assert f["bad_unresolved"] == 0, f"hung faulty-tenant futures: {f}"
+        assert f["good_max_abs_err"] <= ORACLE_TOL, (
+            f"healthy tenant off the oracle: {f}")
+        lib = report["library"]
+        assert lib["plan_cache"]["table_after_tear"] == 0
+        assert lib["plan_cache"]["quarantined_files"] >= 1
+        assert lib["plan_cache"]["warned"] >= 1
+        assert lib["plan_cache"]["reloaded_plans"] >= 1
+        assert lib["retune"]["retunes_done"] == 1
+        assert lib["retune"]["retune_errors"] == 2
+        assert lib["retune"]["retunes_failed"] == 0
+        assert lib["retune"]["last_retune_error"]
+        assert lib["prepare_oom"]["fires"] == 1
+        assert lib["prepare_oom"]["inf_marked"] >= 1
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small scale + gated claims for CI")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write chaos-drill metrics to this JSON file")
+    args = ap.parse_args()
+    lines = ["name,us_per_call,derived"]
+    main(lines, smoke=args.smoke, json_path=args.json)
+    print("\n".join(lines))
+    print("# fig19 ok", file=sys.stderr)

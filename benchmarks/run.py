@@ -34,6 +34,7 @@ def main() -> None:
         fig16_spmspv,
         fig17_solver,
         fig18_fleet,
+        fig19_chaos,
         table2_register_blocking,
     )
 
@@ -56,6 +57,7 @@ def main() -> None:
         "fig16": fig16_spmspv,
         "fig17": fig17_solver,
         "fig18": fig18_fleet,
+        "fig19": fig19_chaos,
     }
     only = set(args.only.split(",")) if args.only else None
     lines: list = ["name,us_per_call,derived"]

@@ -78,7 +78,14 @@ import numpy as np
 from repro.core.distributed import assemble_rows, stacked_spmm
 from repro.core.formats import CSRMatrix
 from repro.core.partition import rows_balanced, stack_csr_shards
-from repro.runtime.executable import fused_batch_executable
+from repro.runtime.executable import finite_guard, fused_batch_executable
+from repro.runtime.faults import FaultPlan, InjectedFault, active_plan
+from repro.runtime.supervisor import (
+    FALLBACK_TIERS,
+    NonFiniteOutput,
+    Supervisor,
+    fallback_op,
+)
 from repro.tune import PlanCache, SparseOperator
 from repro.tune.operator import runner as _bind_runner
 
@@ -105,11 +112,19 @@ class EngineRequest:
     bucket: Any = None
     _ys: jax.Array | None = None  # the whole batch result (m, bucket)
     _col: int = 0  # this request's column of _ys
+    _exc: BaseException | None = None  # set when the batch failed for good
     _engine: Any = dataclasses.field(default=None, repr=False, compare=False)
 
     @property
     def done(self) -> bool:
-        return self._ys is not None
+        """Resolved — with a result OR an exception.  A request never stays
+        un-done forever: a batch the supervisor cannot serve fails every
+        future in it via :meth:`set_exception`."""
+        return self._ys is not None or self._exc is not None
+
+    @property
+    def failed(self) -> bool:
+        return self._exc is not None
 
     @property
     def y(self) -> jax.Array | None:
@@ -119,12 +134,30 @@ class EngineRequest:
             return None
         return self._ys[:, self._col] if self._ys.ndim == 2 else self._ys
 
-    def result(self) -> jax.Array:
-        """Block until this request is served; returns y (the future API)."""
-        if self._ys is None:
+    def set_exception(self, exc: BaseException) -> None:
+        """Fail this future: ``result()`` raises ``exc`` instead of
+        blocking forever on a batch that will never retire."""
+        self._exc = exc
+        self.t_done = time.perf_counter()
+
+    def result(self, timeout: float | None = None) -> jax.Array:
+        """Block until this request resolves; returns y (the future API).
+
+        Raises the batch's failure if the supervisor gave up on it, or
+        ``TimeoutError`` (with this request's bucket/engine context) after
+        ``timeout`` seconds — so a caller can bound its wait even when the
+        serving loop itself is wedged.
+        """
+        if not self.done:
             if self._engine is None:
                 raise RuntimeError("request is not attached to an engine")
-            self._engine._fulfill(self)
+            deadline = (
+                None if timeout is None
+                else time.perf_counter() + float(timeout)
+            )
+            self._engine._fulfill(self, deadline=deadline)
+        if self._exc is not None:
+            raise self._exc
         return self.y
 
     @property
@@ -145,6 +178,16 @@ class EngineStats:
     # They never enter the k-bucket occupancy math: a sparse dispatch serves
     # exactly one request, so column padding does not apply to it.
     sparse_dispatched: dict = dataclasses.field(default_factory=dict)
+    # Supervision counters (see runtime.supervisor): a retried batch counts
+    # one retry per re-dispatch; a batch the fallback chain could not serve
+    # counts its requests under failed_requests (their futures carry the
+    # exception — they are resolved, not served, so they never enter the
+    # latency or occupancy figures).
+    failed_requests: int = 0
+    failed_batches: int = 0
+    retries: int = 0
+    demotions: int = 0
+    promotions: int = 0
 
     def record(self, bucket, n_real: int, lats: Iterable[float]) -> None:
         self.n_dispatches += 1
@@ -190,6 +233,11 @@ class EngineStats:
             "padded_cols": self.padded_cols,
             "latency_mean_ms": round(float(lats.mean()) * 1e3, 3),
             "latency_p99_ms": round(float(np.quantile(lats, 0.99)) * 1e3, 3),
+            "failed_requests": self.failed_requests,
+            "failed_batches": self.failed_batches,
+            "retries": self.retries,
+            "demotions": self.demotions,
+            "promotions": self.promotions,
         }
 
 
@@ -223,6 +271,26 @@ class SparseEngine:
     looks like a kernel accuracy bug from the caller's side.
     ``strict_dtype=True`` turns the cast into a ``TypeError`` for callers
     that would rather fail than lose precision.
+
+    **Failure policy** (``runtime.supervisor``).  A batch that fails — the
+    dispatch raises, the device block raises, or (with ``nan_guard=True``)
+    the on-device finite guard flags NaN/Inf output — is retried up to
+    ``supervisor.max_retries`` times with capped exponential backoff, then
+    the bucket is *demoted* down the fallback chain (tuned plan →
+    ``csr/vector`` → ``sell/ref``); if even the chain's last tier cannot
+    serve it, every future in the batch fails via ``set_exception`` — a
+    submitted request ALWAYS resolves, with a result or an exception.
+    FIFO retirement and bitwise results for unaffected batches are
+    preserved: recovery happens strictly after older in-flight batches
+    retire, on freshly re-assembled operands.  A background repair thread
+    probes a demoted bucket's saved tuned executable every
+    ``supervisor.repair_interval_s`` and re-promotes it through
+    ``hot_swap`` once a probe succeeds (dispatch-boundary semantics, like
+    a retune swap; mesh buckets demote to a single-device fallback and
+    repair the same way).  ``faults=`` arms a
+    :class:`repro.runtime.faults.FaultPlan` (defaults to the
+    ``$REPRO_FAULTS`` plan); ``name=`` labels this engine in fault
+    contexts and error messages (the fleet passes the tenant name).
     """
 
     def __init__(
@@ -240,6 +308,10 @@ class SparseEngine:
         strict_dtype: bool = False,
         ops: dict[int, SparseOperator] | None = None,
         x_nnz_buckets: Sequence[int] | None = None,
+        name: str | None = None,
+        supervisor: Supervisor | None = None,
+        faults: FaultPlan | None = None,
+        nan_guard: bool = False,
         **build_kwargs: Any,
     ):
         if not ks:
@@ -251,6 +323,10 @@ class SparseEngine:
             )
         self.a = a
         self.shape = a.shape
+        self.name = name
+        self.supervisor = supervisor if supervisor is not None else Supervisor()
+        self.faults = faults if faults is not None else active_plan()
+        self.nan_guard = bool(nan_guard)
         self.ks = tuple(sorted({int(k) for k in ks}))
         self.mesh = mesh
         self.axis = axis if axis is not None else (
@@ -324,7 +400,17 @@ class SparseEngine:
         # list with it so ONE executable per bucket serves every occupancy
         # (also the legacy path's pad column).
         self._zero = jnp.zeros((self.shape[1],), jnp.float32)
+        self._nan_col = None  # lazy poisoned column for the engine.nan site
         self.stats = EngineStats()
+        # Degraded-mode state: bucket -> fallback-chain level (1-based), and
+        # the saved tuned (op, exec) the repair thread probes/re-promotes.
+        self._closed = False
+        self.consecutive_failures = 0  # fully-failed batches since a success
+        self._demoted: dict[Any, int] = {}
+        self._demote_saved: dict[Any, tuple] = {}
+        self._repair_lock = threading.Lock()
+        self._repair_thread: threading.Thread | None = None
+        self._repair_stop = threading.Event()
 
     # -- queueing -----------------------------------------------------------
     @property
@@ -348,6 +434,7 @@ class SparseEngine:
         warning once per engine, or raising ``TypeError`` under
         ``strict_dtype=True``.  See the class docstring's dtype policy.
         """
+        self._check_open()
         if not isinstance(x, jax.Array):  # asarray on a device array costs
             # Through numpy, NOT jnp: with x64 disabled jnp.asarray folds
             # float64 to f32 before the dtype is ever observable, which is
@@ -401,13 +488,14 @@ class SparseEngine:
         the async in-flight window and retire through the same machinery;
         the returned future behaves exactly like a dense one.
         """
+        self._check_open()
         if self.mesh is not None or self.n_shards > 1:
             raise NotImplementedError(
                 "submit_sparse is single-device for now: distributed SpMSpV "
                 "under the mesh schedules is the ROADMAP follow-on of this "
                 "tier"
             )
-        from repro.kernels.spmspv import pad_sparse_rhs, validate_sparse_rhs
+        from repro.kernels.spmspv import validate_sparse_rhs
 
         n = self.shape[1]
         idx, val = validate_sparse_rhs(indices, values, n)
@@ -435,7 +523,6 @@ class SparseEngine:
             x = np.zeros((n,), np.float32)
             x[idx] = val
             return self.submit(x)
-        xi, xv = pad_sparse_rhs(idx, val, bucket, n)
         req = EngineRequest(
             rid=self._rid, x=(idx, val), t_submit=time.perf_counter(),
             _engine=self,
@@ -445,9 +532,14 @@ class SparseEngine:
         window = max(1, self.async_depth)
         while len(self._inflight) >= window:
             self._retire_one()
-        ys = self._sparse_exec(bucket)((xi, xv))  # host tuple: the
-        # spmspv runner picks the work bucket from xi on host
-        self._inflight.append((ys, [req], ("spmspv", bucket), 1))
+        key = ("spmspv", bucket)
+        try:
+            ys, ok = self._launch(key, [req])
+        except Exception as exc:
+            self.flush()  # older batches retire first: FIFO holds under faults
+            self._recover([req], key, 1, exc)
+            return req
+        self._inflight.append((ys, ok, [req], key, 1))
         if self.async_depth == 0:
             self._retire_one()
         return req
@@ -466,7 +558,10 @@ class SparseEngine:
             # The sparse runner is already a persistent per-work-bucket
             # dispatch (spmspv_bind caches jitted executables per gathered
             # work size); no fused batch assembly applies to one request.
-            fn = self._sparse_execs[bucket] = self._sparse_op(bucket)._run
+            fn = self._sparse_op(bucket)._run
+            if self.nan_guard:
+                fn = finite_guard(fn)
+            self._sparse_execs[bucket] = fn
         return fn
 
     # -- hot swap -----------------------------------------------------------
@@ -551,12 +646,7 @@ class SparseEngine:
             return 0
         bucket, take = self._bucket_for(len(self._queue))
         pop = self._queue.popleft
-        reqs = []
-        xs = []
-        for _ in range(take):
-            req = pop()
-            reqs.append(req)
-            xs.append(req.x)
+        reqs = [pop() for _ in range(take)]
 
         if self.legacy_dispatch:
             return self._step_legacy(reqs, bucket, take)
@@ -568,13 +658,85 @@ class SparseEngine:
         while len(self._inflight) >= window:
             self._retire_one()
 
-        if take < bucket:  # burst tail: same program, zero pad columns
-            xs.extend([self._zero] * (bucket - take))
-        ys = self._exec(bucket)(*xs)
-        self._inflight.append((ys, reqs, bucket, take))
+        try:
+            ys, ok = self._launch(bucket, reqs)
+        except Exception as exc:
+            # A dispatch-time failure must not reorder retirement: retire
+            # every older in-flight batch first, then recover this one
+            # synchronously (retry -> demote -> fail its futures).
+            self.flush()
+            self._recover(reqs, bucket, take, exc)
+            return take
+        self._inflight.append((ys, ok, reqs, bucket, take))
         if self.async_depth == 0:
             self._retire_one()
         return take
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError(
+                f"SparseEngine {self.name or 'unnamed'} is closed: submit "
+                "after close() would enqueue into a dead serving loop — "
+                "build a new engine (plans are cached, so it is cheap)"
+            )
+
+    def close(self) -> None:
+        """Drain every outstanding request, then refuse new submissions and
+        stop the background repair thread.  Idempotent."""
+        if self._closed:
+            return
+        self.drain()
+        self._closed = True
+        self._repair_stop.set()
+        t = self._repair_thread
+        if t is not None and t.is_alive():
+            t.join(timeout=5.0)
+
+    def _nan_column(self) -> jax.Array:
+        if self._nan_col is None:
+            self._nan_col = jnp.full((self.shape[1],), jnp.nan, jnp.float32)
+        return self._nan_col
+
+    def _assemble(self, reqs: list, bucket) -> tuple:
+        """(Re)build a batch's operand list from its requests — recovery
+        re-assembles from ``req.x`` so a retry never reuses an operand a
+        fault may have poisoned."""
+        if isinstance(bucket, tuple):  # sparse-RHS: one request per batch
+            from repro.kernels.spmspv import pad_sparse_rhs
+
+            idx, val = reqs[0].x
+            return (pad_sparse_rhs(idx, val, bucket[1], self.shape[1]),)
+        xs = [r.x for r in reqs]
+        if len(xs) < bucket:  # burst tail: same program, zero pad columns
+            xs.extend([self._zero] * (bucket - len(xs)))
+        return tuple(xs)
+
+    def _launch(self, bucket, reqs: list):
+        """Assemble + dispatch one batch through the bucket's executable,
+        firing any armed injection sites on the way; returns ``(ys, ok)``
+        where ``ok`` is the on-device all-finite flag (None when the guard
+        is off)."""
+        faults = self.faults
+        if faults is not None:
+            faults.fire("engine.dispatch", engine=self.name, bucket=bucket)
+        xs = self._assemble(reqs, bucket)
+        if (
+            faults is not None
+            and not isinstance(bucket, tuple)
+            and faults.should_fire("engine.nan", engine=self.name,
+                                   bucket=bucket)
+        ):
+            # "Slab DMA returned garbage": poison one column so the kernel
+            # output goes NaN — detected by the nan_guard at retirement.
+            xs = (self._nan_column(),) + xs[1:]
+        if isinstance(bucket, tuple):
+            ys = self._sparse_exec(bucket[1])(*xs)  # host (xi, xv) tuple:
+            # the spmspv runner picks the work bucket from xi on host
+        else:
+            ys = self._exec(bucket)(*xs)
+        if isinstance(ys, tuple):
+            return ys  # guarded executable: (ys, all_finite)
+        return ys, None
 
     def _exec(self, bucket: int):
         """The bucket's persistent executable: ``(x_0..x_{bucket-1}) -> ys``
@@ -599,6 +761,7 @@ class SparseEngine:
             fn = fused_batch_executable(
                 (lambda x: body(x[:, None])) if bucket == 1 else body,
                 bucket=bucket,
+                guard=self.nan_guard,
             )
         else:
             fn = self._make_exec(bucket, self.ops[bucket])
@@ -626,14 +789,26 @@ class SparseEngine:
             def fn(*xs, _asm=asm, _run=run):
                 return _run(_asm(*xs))
 
-            return fn
-        return fused_batch_executable(op._run, bucket=bucket)
+            return finite_guard(fn) if self.nan_guard else fn
+        return fused_batch_executable(
+            op._run, bucket=bucket, guard=self.nan_guard
+        )
 
     # -- retirement ---------------------------------------------------------
     def _retire_one(self) -> int:
-        """Await the oldest in-flight batch; fill its futures + stats."""
-        ys, reqs, bucket, take = self._inflight.popleft()
-        ys.block_until_ready()
+        """Await the oldest in-flight batch; fill its futures + stats.
+        A batch that failed on device (or flagged non-finite output) goes
+        through :meth:`_recover` instead of filling futures."""
+        ys, ok, reqs, bucket, take = self._inflight.popleft()
+        exc: Exception | None = None
+        try:
+            ys.block_until_ready()
+            if ok is not None and not bool(ok):
+                exc = self._nonfinite(bucket)
+        except Exception as e:  # device-side failure surfaces at the block
+            exc = e
+        if exc is not None:
+            return self._recover(reqs, bucket, take, exc)
         t_done = time.perf_counter()
         lats = []
         for i, req in enumerate(reqs):
@@ -643,7 +818,198 @@ class SparseEngine:
             req.bucket = bucket
             lats.append(t_done - req.t_submit)
         self.stats.record(bucket, take, lats)
+        self.consecutive_failures = 0
         return take
+
+    def _nonfinite(self, bucket) -> NonFiniteOutput:
+        return NonFiniteOutput(
+            f"bucket {bucket} batch produced non-finite outputs "
+            f"(engine {self.name or 'unnamed'}; nan_guard flagged it on "
+            "device)"
+        )
+
+    # -- supervision: retry -> demote -> fail-the-futures -------------------
+    def _recover(self, reqs: list, bucket, take: int, exc: Exception) -> int:
+        """Serve a failed batch through the supervision policy.
+
+        Retries the current tier up to ``max_retries`` times with capped
+        backoff (operands re-assembled from the requests each attempt, so a
+        poisoned slab is never reused), then demotes the bucket down the
+        fallback chain and retries there; when the chain is exhausted every
+        future fails via ``set_exception`` — the no-hung-futures guarantee.
+        Runs synchronously on the serving thread AFTER older batches
+        retired, so FIFO retirement order and bitwise results of unaffected
+        batches are untouched.
+        """
+        sup = self.supervisor
+        sup.record(
+            "batch_failed", engine=self.name, bucket=bucket, error=repr(exc)
+        )
+        last: Exception = exc
+        attempt = 0
+        budget = sup.max_retries  # retries left on the current tier
+        while True:
+            if budget <= 0:
+                if not self._demote(bucket, last):
+                    break  # chain exhausted
+                budget = 1 + sup.max_retries  # fresh budget for the new tier
+            budget -= 1
+            sup.sleep(sup.backoff(attempt))
+            attempt += 1
+            self.stats.retries += 1
+            sup.retries += 1
+            try:
+                ys, ok = self._launch(bucket, reqs)
+                ys.block_until_ready()
+                if ok is not None and not bool(ok):
+                    raise self._nonfinite(bucket)
+            except Exception as e:
+                last = e
+                continue
+            t_done = time.perf_counter()
+            lats = []
+            for i, req in enumerate(reqs):
+                req._ys = ys
+                req._col = i
+                req.t_done = t_done
+                req.bucket = bucket
+                lats.append(t_done - req.t_submit)
+            self.stats.record(bucket, take, lats)
+            self.consecutive_failures = 0
+            return take
+        for req in reqs:
+            req.bucket = bucket
+            req.set_exception(last)
+        self.stats.failed_batches += 1
+        self.stats.failed_requests += take
+        self.consecutive_failures += 1
+        sup.failures += 1
+        sup.record(
+            "batch_abandoned", engine=self.name, bucket=bucket,
+            n_requests=take, error=repr(last),
+        )
+        return take
+
+    def _demote(self, bucket, exc: Exception) -> bool:
+        """Install the next fallback tier for one bucket; False when the
+        chain is exhausted.  The tuned (op, exec) is saved the first time
+        so the repair thread can probe and re-promote it."""
+        if self.legacy_dispatch:
+            return False  # the baseline path has no executable table to swap
+        level = self._demoted.get(bucket, 0)
+        while level < len(FALLBACK_TIERS):
+            level += 1
+            try:
+                tier, op = fallback_op(self.a, bucket, level)
+            except Exception:
+                continue  # this tier can't build here (e.g. its prepare
+                # failed too); try the next one down
+            if bucket not in self._demote_saved:
+                if isinstance(bucket, tuple):
+                    saved = (
+                        self._sparse_ops.get(bucket[1]),
+                        self._sparse_execs.get(bucket[1]),
+                    )
+                else:
+                    saved = (self.ops.get(bucket), self._execs.get(bucket))
+                self._demote_saved[bucket] = saved
+            if isinstance(bucket, tuple):
+                fn = op._run
+                if self.nan_guard:
+                    fn = finite_guard(fn)
+                self._sparse_ops[bucket[1]] = op
+                self._sparse_execs[bucket[1]] = fn
+            else:
+                # Always a single-device fused executable: a mesh bucket
+                # degrades to unsharded serving (correct, slower) because
+                # from_candidate tiers are single-device by construction.
+                fn = fused_batch_executable(
+                    op._run, bucket=bucket, guard=self.nan_guard
+                )
+                self.ops[bucket] = op
+                self._execs[bucket] = fn
+            self._demoted[bucket] = level
+            self.stats.demotions += 1
+            self.supervisor.demotions += 1
+            self.supervisor.record(
+                "demote", engine=self.name, bucket=bucket, tier=tier,
+                level=level, error=repr(exc),
+            )
+            self._start_repair()
+            return True
+        return False
+
+    # -- background repair: probe the tuned exec, re-promote via hot_swap ---
+    def _start_repair(self) -> None:
+        with self._repair_lock:
+            t = self._repair_thread
+            if t is not None and t.is_alive():
+                return
+            self._repair_stop.clear()
+            t = threading.Thread(
+                target=self._repair_worker, name="engine-repair", daemon=True
+            )
+            self._repair_thread = t
+            t.start()
+
+    def _repair_worker(self) -> None:
+        """Probe each demoted bucket's saved tuned executable off the hot
+        path; on a clean probe, stage the tuned plan back in through
+        ``hot_swap`` (the serving thread adopts it at its next dispatch
+        boundary — the same semantics as a retune swap).  Exits when no
+        demotions remain; a later demotion starts a fresh thread."""
+        interval = self.supervisor.repair_interval_s
+        while not self._repair_stop.wait(interval):
+            if not self._demoted:
+                return
+            for bucket in [b for b in list(self._demoted)
+                           if not isinstance(b, tuple)]:
+                saved = self._demote_saved.get(bucket)
+                if saved is None or saved[0] is None:
+                    continue  # injected/shard tables: nothing to restore
+                op, fn = saved
+                try:
+                    if fn is None:
+                        fn = self._make_exec(bucket, op)
+                        self._demote_saved[bucket] = (op, fn)
+                    faults = self.faults
+                    if faults is not None:
+                        faults.fire("engine.dispatch", engine=self.name,
+                                    bucket=bucket, probe=True)
+                        if faults.should_fire("engine.nan", engine=self.name,
+                                              bucket=bucket, probe=True):
+                            raise InjectedFault(
+                                "injected nan at repair probe"
+                            )
+                    out = fn(*([self._zero] * bucket))
+                    ys = out[0] if isinstance(out, tuple) else out
+                    jax.block_until_ready(ys)
+                    if not bool(jnp.isfinite(ys).all()):
+                        raise self._nonfinite(bucket)
+                except Exception:
+                    continue  # still sick; probe again next interval
+                self._promote(bucket, op, fn)
+
+    def _promote(self, bucket: int, op: SparseOperator, fn) -> None:
+        """Stage the healed tuned plan back via ``hot_swap``.  Note the
+        swap replaces the whole table from a snapshot: a bucket demoted
+        between staging and adoption briefly reverts to its tuned exec and
+        simply re-recovers on its next failure."""
+        if not all(int(k) in self.ops for k in self.ks):
+            return  # shard-mode table: nothing to swap through
+        ops = {int(k): self.ops[int(k)] for k in self.ks}
+        ops[bucket] = op
+        execs = dict(self._execs)
+        execs[bucket] = fn
+        try:
+            self.hot_swap(ops, execs=execs)
+        except Exception:
+            return
+        self._demoted.pop(bucket, None)
+        self._demote_saved.pop(bucket, None)
+        self.stats.promotions += 1
+        self.supervisor.promotions += 1
+        self.supervisor.record("promote", engine=self.name, bucket=bucket)
 
     def _retire_ready(self) -> None:
         """Retire in-flight batches whose results are already materialized.
@@ -664,7 +1030,7 @@ class SparseEngine:
             served += self._retire_one()
         return served
 
-    def _fulfill(self, req: EngineRequest) -> None:
+    def _fulfill(self, req: EngineRequest, deadline: float | None = None) -> None:
         """Serve until ``req`` is done (the blocking half of its future).
 
         Retires the in-flight window FIRST: a request whose batch is
@@ -672,13 +1038,33 @@ class SparseEngine:
         queued requests past the ``max_wait_s`` admission gate.  Only when
         ``req`` is still queued does the loop force dispatch — the caller
         blocking on it overrides the gate for the queue ahead of it.
+
+        ``deadline`` (perf_counter time) bounds the wait: past it, a still
+        unresolved request raises ``TimeoutError`` with its bucket/engine
+        context instead of blocking forever on a wedged batch.
         """
-        while req._ys is None:
+        while not req.done:
+            if deadline is not None:
+                now = time.perf_counter()
+                if now >= deadline:
+                    raise TimeoutError(
+                        f"request {req.rid} (bucket={req.bucket}, engine="
+                        f"{self.name or 'unnamed'}) unresolved at timeout: "
+                        f"{self.pending} queued, {self.in_flight} in flight "
+                        "— the supervisor fails dead batches via "
+                        "set_exception, so a persistent timeout usually "
+                        "means nothing is driving step()"
+                    )
+                if self._inflight and not self._inflight[0][0].is_ready():
+                    # Poll instead of blocking so the deadline stays honored
+                    # even when the head batch never becomes ready.
+                    time.sleep(min(1e-3, max(0.0, deadline - now)))
+                    continue
             if self._inflight:
                 self._retire_one()
                 continue
             if self.step(force=True) == 0:
-                if req._ys is not None:  # step's idle-path retire served it
+                if req.done:  # step's idle-path retire served it
                     break
                 raise RuntimeError("request is not pending on this engine")
 

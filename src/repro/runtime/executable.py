@@ -47,7 +47,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-__all__ = ["aot_compile", "fused_batch_executable"]
+__all__ = ["aot_compile", "fused_batch_executable", "finite_guard"]
 
 
 def aot_compile(fn: Callable, *avals, donate_argnums=()) -> Callable:
@@ -73,7 +73,27 @@ def aot_compile(fn: Callable, *avals, donate_argnums=()) -> Callable:
         )
 
 
-def fused_batch_executable(run: Callable | None, *, bucket: int) -> Callable:
+def finite_guard(fn: Callable) -> Callable:
+    """Wrap an executable so every call returns ``(ys, all_finite)``.
+
+    The reduction runs ON DEVICE (one jitted ``isfinite().all()``), so the
+    guard costs a scalar transfer at retirement, never a slab transfer.
+    Used by the engine's non-fused paths (mesh assembly composition,
+    sparse-RHS runners); the fused bucket programs bake the same check in
+    via ``fused_batch_executable(..., guard=True)`` instead.
+    """
+    check = jax.jit(lambda ys: jnp.isfinite(ys).all())
+
+    def guarded(*xs):
+        ys = fn(*xs)
+        return ys, check(ys)
+
+    return guarded
+
+
+def fused_batch_executable(
+    run: Callable | None, *, bucket: int, guard: bool = False
+) -> Callable:
     """Persistent compiled ``(x_0..x_{bucket-1}) -> ys`` for one bucket.
 
     ``run`` is the bucket plan's bound runner (prepared arrays already
@@ -92,16 +112,24 @@ def fused_batch_executable(run: Callable | None, *, bucket: int) -> Callable:
     ``run=None`` returns the slab itself instead of applying a kernel (the
     mesh path feeds its shard_map runner, which places the slab across
     devices before its own jitted program runs).
+
+    ``guard=True`` fuses an on-device ``isfinite().all()`` over the output
+    into the same program — the call returns ``(ys, all_finite)`` and the
+    engine's supervisor treats a False flag as a fault (NaN/Inf outputs
+    from a poisoned operand or a broken kernel).  Opt-in: the extra
+    reduction is device work the default hot path does not pay.
     """
     if bucket == 1:
 
         def fn(x):
-            return x[:, None] if run is None else run(x)
+            ys = x[:, None] if run is None else run(x)
+            return (ys, jnp.isfinite(ys).all()) if guard else ys
 
     else:
 
         def fn(*xs):
             slab = jnp.stack(xs, axis=1)  # (n, bucket)
-            return slab if run is None else run(slab)
+            ys = slab if run is None else run(slab)
+            return (ys, jnp.isfinite(ys).all()) if guard else ys
 
     return jax.jit(fn)

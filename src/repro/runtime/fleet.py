@@ -61,6 +61,8 @@ import jax
 
 from repro.core.formats import CSRMatrix
 from repro.runtime.engine import K_BUCKETS, EngineRequest, SparseEngine
+from repro.runtime.faults import FaultPlan, active_plan
+from repro.runtime.supervisor import CircuitOpenError, Supervisor
 from repro.tune import (
     PlanCache,
     SparseOperator,
@@ -71,7 +73,13 @@ from repro.tune import (
     prep_nbytes,
 )
 
-__all__ = ["SparseFleet", "FleetStats", "Tenant", "TRAFFIC_HALFLIFE_S"]
+__all__ = [
+    "SparseFleet",
+    "FleetStats",
+    "Tenant",
+    "TRAFFIC_HALFLIFE_S",
+    "CircuitOpenError",
+]
 
 _ENV_BUDGET = "REPRO_FLEET_BUDGET_BYTES"
 _DEFAULT_BUDGET = 512 * 1024 * 1024
@@ -118,6 +126,15 @@ class Tenant:
     n_admissions: int = 0
     n_evictions: int = 0
     retuned: bool = False
+    # Circuit breaker: perf_counter time the quarantine lifts (0 = closed).
+    # A quarantined tenant's submits fail fast with CircuitOpenError and
+    # step() skips it, so a poisoning tenant never stalls the scheduler.
+    quarantined_until: float = 0.0
+    n_quarantines: int = 0
+
+    @property
+    def quarantined(self) -> bool:
+        return time.perf_counter() < self.quarantined_until
 
     def touch(self, now: float, add: float = 1.0) -> None:
         self.decay(now)
@@ -157,7 +174,10 @@ class FleetStats:
     over_budget_admissions: int = 0  # admitted with nothing left to evict
     retunes_queued: int = 0
     retunes_done: int = 0
-    retunes_failed: int = 0
+    retunes_failed: int = 0  # exhausted every retry; predicted plan serves on
+    retune_errors: int = 0  # every retune attempt that raised (incl. retried)
+    last_retune_error: str | None = None
+    quarantines: int = 0  # circuit-breaker openings across all tenants
     _fleet: Any = dataclasses.field(default=None, repr=False, compare=False)
 
     def summary(self) -> dict[str, Any]:
@@ -180,6 +200,8 @@ class FleetStats:
                     "resident": t.resident,
                     "weight": round(t.decay(time.perf_counter()), 4),
                     "nbytes": t.nbytes if t.resident else 0,
+                    "quarantined": t.quarantined,
+                    "quarantines": t.n_quarantines,
                     "admitted_from": {
                         k: v for k, v in sorted(t.admitted_from.items())
                     },
@@ -221,6 +243,13 @@ class SparseFleet:
         async_depth: int = 2,
         retune: bool = True,
         retune_kwargs: dict[str, Any] | None = None,
+        retune_max_retries: int = 2,
+        retune_backoff_s: float = 0.05,
+        breaker_threshold: int = 3,
+        breaker_reset_s: float = 5.0,
+        supervisor_kwargs: dict[str, Any] | None = None,
+        nan_guard: bool = False,
+        faults: FaultPlan | None = None,
     ):
         self.ks = tuple(sorted({int(k) for k in ks}))
         self.cache = default_cache() if cache is None else cache
@@ -231,6 +260,17 @@ class SparseFleet:
         self.async_depth = int(async_depth)
         self.retune_default = bool(retune)
         self.retune_kwargs = dict(retune_kwargs or {})
+        self.retune_max_retries = max(0, int(retune_max_retries))
+        self.retune_backoff_s = float(retune_backoff_s)
+        # Per-tenant circuit breaker: after `breaker_threshold` consecutive
+        # fully-failed batches the tenant is quarantined for
+        # `breaker_reset_s` (queued requests fail fast with
+        # CircuitOpenError) instead of stalling cross-tenant scheduling.
+        self.breaker_threshold = max(1, int(breaker_threshold))
+        self.breaker_reset_s = float(breaker_reset_s)
+        self.supervisor_kwargs = dict(supervisor_kwargs or {})
+        self.nan_guard = bool(nan_guard)
+        self.faults = faults if faults is not None else active_plan()
         self._tenants: dict[str, Tenant] = {}
         self._rr = 0  # rotating round-robin start for equal-deadline ties
         self.stats_fleet = FleetStats(_fleet=self)
@@ -337,6 +377,12 @@ class SparseFleet:
             ops=ops,
             max_wait_s=tenant.max_wait_s,
             async_depth=self.async_depth,
+            name=tenant.name,
+            # One supervisor per tenant so failure/demotion attribution and
+            # event logs stay per-tenant.
+            supervisor=Supervisor(**self.supervisor_kwargs),
+            faults=self.faults,
+            nan_guard=self.nan_guard,
         )
         tenant.nbytes = nbytes
         tenant.n_admissions += 1
@@ -368,10 +414,25 @@ class SparseFleet:
                 self._retune_q.task_done()
                 return
             try:
-                self._retune_one(name)
-                self.stats_fleet.retunes_done += 1
-            except Exception:  # keep serving; the predicted plan still works
-                self.stats_fleet.retunes_failed += 1
+                # Capped-backoff retry: a transient failure (device hiccup,
+                # injected fault) must not silently pin the predicted plan
+                # forever.  Every raising attempt is counted and surfaced in
+                # FleetStats; only exhaustion marks the retune failed (the
+                # predicted plan keeps serving either way).
+                for attempt in range(self.retune_max_retries + 1):
+                    try:
+                        self._retune_one(name)
+                        self.stats_fleet.retunes_done += 1
+                        break
+                    except Exception as exc:
+                        self.stats_fleet.retune_errors += 1
+                        self.stats_fleet.last_retune_error = f"{name}: {exc!r}"
+                        if attempt >= self.retune_max_retries:
+                            self.stats_fleet.retunes_failed += 1
+                        else:
+                            time.sleep(
+                                min(1.0, self.retune_backoff_s * 2.0 ** attempt)
+                            )
             finally:
                 self._retune_q.task_done()
 
@@ -389,6 +450,8 @@ class SparseFleet:
         tenant = self._tenants.get(name)
         if tenant is None:
             return
+        if self.faults is not None:
+            self.faults.fire("fleet.retune", tenant=name)
         ops = SparseOperator.build_multi(
             tenant.a, ks=self.ks, cache=self.cache, **self.retune_kwargs
         )
@@ -399,7 +462,8 @@ class SparseFleet:
         zero = jax.numpy.zeros((tenant.a.shape[1],), jax.numpy.float32)
         for k in self.ks:
             fn = eng._make_exec(k, ops[k])
-            fn(*([zero] * k)).block_until_ready()  # compile + warm here
+            # compile + warm here (guarded executables return a tuple)
+            jax.block_until_ready(fn(*([zero] * k)))
             execs[k] = fn
         eng.hot_swap(ops, execs=execs)
         tenant.nbytes = _table_bytes(ops)
@@ -428,7 +492,8 @@ class SparseFleet:
         return True
 
     def close(self) -> None:
-        """Stop the retune worker (after finishing queued work)."""
+        """Stop the retune worker (after finishing queued work) and every
+        resident tenant's background repair thread."""
         if self._closed:
             return
         self._closed = True
@@ -436,11 +501,28 @@ class SparseFleet:
             self._retune_q.put(None)
             self._retune_thread.join()
             self._retune_thread = None
+        for t in self._tenants.values():
+            if t.engine is not None:
+                t.engine._repair_stop.set()
 
     # -- serving ------------------------------------------------------------
     def submit(self, name: str, x: jax.Array) -> EngineRequest:
-        """Enqueue y = A_name @ x; reactivates an evicted tenant first."""
+        """Enqueue y = A_name @ x; reactivates an evicted tenant first.
+
+        A quarantined tenant (its circuit breaker opened after
+        ``breaker_threshold`` consecutive fully-failed batches) fails fast
+        with :class:`CircuitOpenError` until its cooldown lapses — failing
+        in microseconds beats queueing work a poisoned engine will fail in
+        milliseconds anyway.
+        """
         tenant = self._tenants[name]
+        if tenant.quarantined:
+            remaining = tenant.quarantined_until - time.perf_counter()
+            raise CircuitOpenError(
+                f"tenant {name!r} is quarantined for another "
+                f"{remaining:.3f}s ({tenant.n_quarantines} quarantines so "
+                "far); resubmit after the cooldown"
+            )
         tenant.touch(time.perf_counter())
         if tenant.engine is None:
             self._admit(tenant)
@@ -461,6 +543,7 @@ class SparseFleet:
             t
             for t in self._tenants.values()
             if t.engine is not None
+            and not t.quarantined
             and (t.engine.pending > 0 or t.engine.in_flight > 0)
         ]
         if not ready:
@@ -479,7 +562,41 @@ class SparseFleet:
         served = 0
         for tenant in sorted(ready, key=deadline):  # stable: keeps RR ties
             served += tenant.engine.step()
+            self._check_breaker(tenant)
         return served
+
+    def _check_breaker(self, tenant: Tenant) -> None:
+        """Open the tenant's circuit after ``breaker_threshold`` consecutive
+        fully-failed batches: quarantine it for ``breaker_reset_s``, retire
+        its in-flight work, and fail its queued requests fast with
+        :class:`CircuitOpenError` (never leave them hanging).  The engine's
+        demote/repair machinery keeps healing underneath; the breaker only
+        protects *other* tenants' latency from a poisoning one.
+        """
+        eng = tenant.engine
+        if eng is None or eng.consecutive_failures < self.breaker_threshold:
+            return
+        now = time.perf_counter()
+        tenant.quarantined_until = now + self.breaker_reset_s
+        tenant.n_quarantines += 1
+        self.stats_fleet.quarantines += 1
+        eng.flush()  # retire (or fail) whatever is still in flight
+        while eng._queue:
+            req = eng._queue.popleft()
+            req.set_exception(
+                CircuitOpenError(
+                    f"tenant {tenant.name!r} quarantined after "
+                    f"{eng.consecutive_failures} consecutive batch failures"
+                )
+            )
+            eng.stats.failed_requests += 1
+        eng.consecutive_failures = 0
+        eng.supervisor.record(
+            "quarantine",
+            tenant=tenant.name,
+            until=tenant.quarantined_until,
+            reset_s=self.breaker_reset_s,
+        )
 
     def drain(self) -> int:
         """Serve every pending request of every tenant; returns #served."""

@@ -59,6 +59,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.formats import CSRMatrix
+from repro.runtime.faults import FaultPlan, active_plan
+from repro.runtime.supervisor import (
+    FALLBACK_TIERS,
+    NonFiniteOutput,
+    Supervisor,
+    fallback_op,
+)
 from repro.tune import PlanCache, SparseOperator
 
 __all__ = [
@@ -132,6 +139,10 @@ class SparseSolver:
         cache: PlanCache | None = None,
         mesh: Any = None,
         axis: str | None = None,
+        name: str | None = None,
+        supervisor: Supervisor | None = None,
+        faults: FaultPlan | None = None,
+        nan_guard: bool = False,
         **build_kwargs: Any,
     ):
         m, n = a.shape
@@ -144,9 +155,14 @@ class SparseSolver:
         self.axis = axis if axis is not None else (
             mesh.axis_names[0] if mesh is not None else None
         )
+        self.name = name
+        self.supervisor = supervisor if supervisor is not None else Supervisor()
+        self.faults = faults if faults is not None else active_plan()
+        self.nan_guard = bool(nan_guard)
         self._build_kwargs = build_kwargs
         self._ops: dict[int, SparseOperator] = {}
         self._progs: dict[tuple, Callable] = {}
+        self._demoted: dict[int, int] = {}  # k -> fallback-chain level
         if mesh is not None:
             from repro.core.distributed import psum_dot_runner
 
@@ -176,6 +192,109 @@ class SparseSolver:
         """True when every built width's plan came from the cache."""
         return all(op.from_cache for op in self._ops.values())
 
+    # -- supervised dispatch -------------------------------------------------
+    def _prog(self, key: tuple, k: int, builder: Callable) -> Callable:
+        """The compiled program for (solver, static-config), built lazily
+        against the CURRENT plan at width k (so a demotion's ``_progs``
+        clear rebinds every program to the fallback operator)."""
+        prog = self._progs.get(key)
+        if prog is None:
+            prog = self._progs[key] = jax.jit(builder(self.op(k)._run))
+        return prog
+
+    def _call(self, key: tuple, k: int, builder: Callable, *args):
+        """Run one solve under supervision: retry with capped backoff, then
+        demote the width's plan down the fallback chain, then re-raise.
+
+        Mirrors the engine's batch policy (see ``SparseEngine._recover``):
+        ``max_retries`` attempts per tier, a demotion refills the budget,
+        and an exhausted chain propagates the last failure to the caller —
+        a solve either returns a finished result or raises, never wedges.
+        With ``nan_guard=True`` non-finite floating outputs are treated as
+        faults (a converged-looking state full of NaN is worse than an
+        exception).
+        """
+        sup = self.supervisor
+        budget = sup.max_retries
+        attempt = 0
+        last: BaseException | None = None
+        while True:
+            try:
+                if self.faults is not None:
+                    self.faults.fire(
+                        "solver.dispatch", solver=key[0], k=k, name=self.name
+                    )
+                out = jax.block_until_ready(self._prog(key, k, builder)(*args))
+                if self.nan_guard:
+                    for leaf in jax.tree_util.tree_leaves(out):
+                        if jnp.issubdtype(
+                            leaf.dtype, jnp.floating
+                        ) and not bool(jnp.isfinite(leaf).all()):
+                            raise NonFiniteOutput(
+                                f"solver {key[0]!r} (k={k}) produced "
+                                "non-finite outputs"
+                            )
+                if attempt:
+                    sup.record(
+                        "solver_recovered", solver=key[0], k=k, attempts=attempt
+                    )
+                return out
+            except Exception as exc:
+                last = exc
+                sup.record(
+                    "solver_attempt_failed",
+                    solver=key[0],
+                    k=k,
+                    error=repr(exc),
+                )
+                if budget > 0:
+                    budget -= 1
+                    sup.retries += 1
+                    sup.sleep(sup.backoff(attempt))
+                    attempt += 1
+                    continue
+                if self._demote(key[0], k, exc):
+                    budget = sup.max_retries
+                    attempt += 1
+                    continue
+                sup.failures += 1
+                sup.record("solver_failed", solver=key[0], k=k, error=repr(exc))
+                raise last
+
+    def _demote(self, solver: str, k: int, exc: BaseException) -> bool:
+        """Walk width k's plan one tier down the fallback chain.
+
+        Mesh solvers never demote: the chain's tiers are single-device
+        operators and silently unsharding a solve the caller laid out over
+        a mesh would change its memory story — the failure propagates
+        instead.  A tier whose own build fails is skipped.  Clearing
+        ``_progs`` drops every compiled program (they close over the old
+        plan's prepared arrays); untouched widths just recompile.
+        """
+        if self.mesh is not None:
+            return False
+        level = self._demoted.get(k, 0) + 1
+        while level <= len(FALLBACK_TIERS):
+            try:
+                tier, op = fallback_op(self.a, int(k), level)
+            except Exception:
+                level += 1
+                continue
+            self._ops[k] = op
+            self._demoted[k] = level
+            self._progs.clear()
+            self.supervisor.demotions += 1
+            self.supervisor.record(
+                "demote",
+                solver=solver,
+                k=k,
+                tier=tier,
+                level=level,
+                error=repr(exc),
+            )
+            return True
+        return False
+
     def _x0(self, x0, shape) -> jax.Array:
         if x0 is None:
             return jnp.zeros(shape, jnp.float32)
@@ -203,15 +322,15 @@ class SparseSolver:
         ``maxiter`` iterations run and ``converged`` reports False
         (fig17's fixed-budget per-iteration-rate mode).
         """
-        run = self.op(1)._run
-        key = ("cg", int(maxiter))
-        prog = self._progs.get(key)
-        if prog is None:
-            prog = self._progs[key] = jax.jit(
-                _make_cg_prog(run, self._dot, int(maxiter))
-            )
         b = jnp.asarray(b, jnp.float32)
-        x, res, it, conv = prog(b, self._x0(x0, b.shape), jnp.float32(tol))
+        x, res, it, conv = self._call(
+            ("cg", int(maxiter)),
+            1,
+            lambda run: _make_cg_prog(run, self._dot, int(maxiter)),
+            b,
+            self._x0(x0, b.shape),
+            jnp.float32(tol),
+        )
         return SolverResult(
             solver="cg",
             iterations=int(it),
@@ -243,14 +362,15 @@ class SparseSolver:
             v0 = jnp.asarray(rng.standard_normal(n).astype(np.float32))
         else:
             v0 = jnp.asarray(v0, jnp.float32)
-        run = self.op(1)._run
-        key = ("lanczos", int(num_steps))
-        prog = self._progs.get(key)
-        if prog is None:
-            prog = self._progs[key] = jax.jit(
-                _make_lanczos_prog(run, self._dot, int(num_steps))
+        alphas, betas = (
+            np.asarray(v)
+            for v in self._call(
+                ("lanczos", int(num_steps)),
+                1,
+                lambda run: _make_lanczos_prog(run, self._dot, int(num_steps)),
+                v0,
             )
-        alphas, betas = (np.asarray(v) for v in prog(v0))
+        )
         ritz = tridiag_eigvalsh(alphas, betas[:-1]) if num_steps > 1 else alphas
         return SolverResult(
             solver="lanczos",
@@ -292,14 +412,13 @@ class SparseSolver:
             v0 = jnp.asarray(v0, jnp.float32)
             if v0.shape != (n, k):
                 raise ValueError(f"expected v0 of shape {(n, k)}, got {v0.shape}")
-        run = self.op(k)._run
-        key = ("block_power", k, int(maxiter))
-        prog = self._progs.get(key)
-        if prog is None:
-            prog = self._progs[key] = jax.jit(
-                _make_block_power_prog(run, self._dot, int(maxiter))
-            )
-        V, theta, diff, it, conv = prog(v0, jnp.float32(tol))
+        V, theta, diff, it, conv = self._call(
+            ("block_power", k, int(maxiter)),
+            k,
+            lambda run: _make_block_power_prog(run, self._dot, int(maxiter)),
+            v0,
+            jnp.float32(tol),
+        )
         return SolverResult(
             solver="block_power",
             iterations=int(it),

@@ -290,6 +290,14 @@ def prepare_cached(
     ``fmt="dist"`` candidates bypass the memo — their placement is mesh-bound
     and already shared through the caller-scoped ``prep_cache``.
     """
+    from repro.runtime.faults import active_plan
+
+    faults = active_plan()
+    if faults is not None:
+        # The OOM injection site: format preparation is where the biggest
+        # allocations happen (padded slabs, permutations), so this is where
+        # a memory-pressure fault would surface in production.
+        faults.fire("prepare.oom", exc=MemoryError, candidate=cand.key())
     if cand.fmt == "dist":
         return prepare(a, cand, mesh=mesh, axis=axis, prep_cache=prep_cache)
     key = (fp or fingerprint(a), _value_digest(a), cand.key())
@@ -705,24 +713,44 @@ class SparseOperator:
         # same discipline, or with warmup=0 its lone timed rep would eat
         # the compile and bias the search against the cheapest estimate.
         warmup_eff = max(warmup, 1) if race else warmup
+        n_failed = 0
+        last_err: str | None = None
         for c in survivors:
-            prep = prepare_cached(a, c, fp=fp, mesh=mesh, axis=axis,
-                                  prep_cache=prep_cache)
-            if sparse_kind:
-                fn = sparse_rhs_runner(a, c, prep, x_nnz=kk)
-            else:
-                fn = runner(a, c, prep, k=kk, mesh=mesh, axis=axis)
-            if solver_step:  # time the fused composite, not the bare kernel
-                fn = solver_step_probe(fn, kk)
-            abort = RACE_FACTOR * best[0] if (race and best is not None) else None
-            t = time_fn(fn, x, warmup=warmup_eff, timed=timed, abort_above=abort)
+            try:
+                prep = prepare_cached(a, c, fp=fp, mesh=mesh, axis=axis,
+                                      prep_cache=prep_cache)
+                if sparse_kind:
+                    fn = sparse_rhs_runner(a, c, prep, x_nnz=kk)
+                else:
+                    fn = runner(a, c, prep, k=kk, mesh=mesh, axis=axis)
+                if solver_step:  # time the fused composite, not the kernel
+                    fn = solver_step_probe(fn, kk)
+                abort = (RACE_FACTOR * best[0]
+                         if (race and best is not None) else None)
+                t = time_fn(fn, x, warmup=warmup_eff, timed=timed,
+                            abort_above=abort)
+            except Exception as exc:
+                # One candidate failing to prepare or run (OOM under memory
+                # pressure, a broken kernel path) must not kill the whole
+                # search — the others still compete.  inf marks it losing.
+                measurements[c.key()] = float("inf")
+                n_failed += 1
+                last_err = f"{c.key()}: {exc!r}"
+                continue
             measurements[c.key()] = t
             if math.isinf(t):
                 n_raced += 1  # abandoned after one rep — pruned by racing
                 continue
             if best is None or t < best[0]:
                 best = (t, c, prep)
-        assert best is not None, "pruning left no candidates"
+        if best is None:
+            raise RuntimeError(
+                f"measured search found no usable candidate for kind="
+                f"{kind!r} k={kk} ({len(survivors)} survivors, "
+                f"{n_failed} failed"
+                + (f"; last error {last_err}" if last_err else "")
+                + ")"
+            )
         t_best, c_best, prep_best = best
         plan = Plan(
             fingerprint=fp,

@@ -26,6 +26,9 @@ import hashlib
 import json
 import os
 import tempfile
+import threading
+import time
+import warnings
 from pathlib import Path
 from typing import Any, Iterable
 
@@ -57,6 +60,12 @@ PLAN_VERSION = 6
 
 _ENV_CACHE = "REPRO_TUNE_CACHE"
 _DEFAULT_CACHE = "~/.cache/repro_tune/plans.json"
+
+# Paths that already emitted a corrupt-cache warning this process — the
+# condition is sticky on disk (the torn file was moved aside), so repeating
+# the warning per PlanCache instance is noise.
+_QUARANTINE_WARNED: set[str] = set()
+_QUARANTINE_LOCK = threading.Lock()
 
 
 def fingerprint(a: CSRMatrix) -> str:
@@ -151,14 +160,72 @@ class PlanCache:
     the JSON file if present and rewrites it atomically on every put.
     """
 
-    def __init__(self, path: str | os.PathLike | None = None):
+    def __init__(
+        self,
+        path: str | os.PathLike | None = None,
+        *,
+        faults: Any = None,
+    ):
         self.path = Path(path).expanduser() if path else None
-        self._plans: dict[str, dict] = {}
-        if self.path is not None and self.path.exists():
-            try:
-                self._plans = self._current(json.loads(self.path.read_text()))
-            except (json.JSONDecodeError, OSError):
-                self._plans = {}  # corrupt cache: start over, never crash
+        self._faults = faults
+        self._plans: dict[str, dict] = self._load_resident()
+
+    def _read_text(self) -> str:
+        """The cache file's text, through the fault plan's torn-read site
+        (``plan_cache.read`` truncates at a seeded offset — the
+        kill-mid-write failure mode)."""
+        text = self.path.read_text()
+        faults = self._faults
+        if faults is None:
+            from repro.runtime.faults import active_plan
+
+            faults = active_plan()
+        if faults is not None:
+            text = faults.corrupt_text(
+                "plan_cache.read", text, path=str(self.path)
+            )
+        return text
+
+    def _load_resident(self) -> dict[str, dict]:
+        """Load the on-disk table; a torn/corrupt file is QUARANTINED.
+
+        A cache that fails to parse (kill mid-write on a filesystem without
+        atomic replace, disk corruption, a hand edit gone wrong) must not
+        crash serving — but silently reusing its path would also let the
+        next atomic ``put`` overwrite the evidence.  The broken file is
+        moved aside to ``<path>.corrupt-<millis>`` (preserved for
+        inspection), one warning names it, and the table starts empty —
+        every plan is then re-searched, which is slow and correct.
+        """
+        if self.path is None or not self.path.exists():
+            return {}
+        try:
+            return self._current(json.loads(self._read_text()))
+        except (json.JSONDecodeError, OSError) as exc:
+            self._quarantine(exc)
+            return {}
+
+    def _quarantine(self, exc: Exception) -> None:
+        try:
+            dest = f"{self.path}.corrupt-{int(time.time() * 1000)}"
+            os.replace(self.path, dest)
+        except OSError:  # racing process already moved it, or FS refused
+            dest = None
+        with _QUARANTINE_LOCK:
+            first = str(self.path) not in _QUARANTINE_WARNED
+            _QUARANTINE_WARNED.add(str(self.path))
+        if first:
+            warnings.warn(
+                f"plan cache {self.path} is corrupt ({exc!r}); "
+                + (
+                    f"quarantined to {dest}"
+                    if dest
+                    else "quarantine rename failed"
+                )
+                + " — starting with an empty table (plans will re-search)",
+                RuntimeWarning,
+                stacklevel=3,
+            )
 
     @staticmethod
     def _current(plans: Any) -> dict[str, dict]:
@@ -268,10 +335,16 @@ class PlanCache:
             # Stale-version entries on disk are dropped, not carried along.
             with self._write_lock():
                 try:
-                    on_disk = self._current(json.loads(self.path.read_text()))
+                    on_disk = self._current(json.loads(self._read_text()))
                     self._plans = {**on_disk, **self._plans}
-                except (FileNotFoundError, json.JSONDecodeError, OSError):
-                    pass
+                except FileNotFoundError:
+                    pass  # nothing persisted yet: first writer
+                except (json.JSONDecodeError, OSError) as exc:
+                    # A torn on-disk file must not merge (it would parse to
+                    # nothing and our replace would destroy the evidence):
+                    # quarantine it exactly like the load path, then write
+                    # the resident table fresh.
+                    self._quarantine(exc)
                 fd, tmp = tempfile.mkstemp(
                     dir=self.path.parent, prefix=self.path.name, suffix=".tmp"
                 )
