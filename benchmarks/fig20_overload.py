@@ -1,0 +1,295 @@
+"""Overload drill: bounded admission, deadline shedding, adaptive brownout.
+
+Not a figure from the paper — it closes the paper's serving story under
+LOAD.  The paper's central finding is that SpMV throughput *saturates*
+once memory latency binds: past the saturation point extra concurrent work
+buys no throughput, only latency.  PR 9 (fig19) made the stack survive
+faults; this drill injects synthetic overload and gates the PR-10 claim
+that offered load past saturation costs *availability of admission*, never
+goodput, latency of the served, or memory.
+
+**Deterministic capacity.**  The ``engine.overload`` fault site arms a
+``delay_s`` slow-dispatch: every launch stalls the serving thread a known
+time, so the engine's saturation capacity is set by the injection, not by
+the CI machine's noise.  Capacity is measured closed-loop (full buckets,
+drain), giving the req/s ceiling and the per-batch service quantum every
+gate is budgeted against.
+
+**Open-loop load generator.**  For each offered multiple (1x/2x/5x of
+measured capacity) a fresh engine — bounded queue, ``reject`` policy,
+deadline shedding, armed brownout controller — is driven by an open-loop
+arrival process: requests arrive on a fixed schedule whether or not the
+engine keeps up (the generator never waits, exactly how real traffic
+behaves).  The gates, asserted at 5x (the deep-overload point):
+
+* **goodput** — served requests/s stays >= 70% of saturation capacity:
+  admission control sheds load *before* it steals service time;
+* **served p99** — within ``shed_after_s`` + a bounded number of service
+  quanta: whatever is served is served on time, because anything that
+  would have been late was shed at a dispatch boundary instead;
+* **typed, fast failure** — every refused submit raises
+  ``OverloadError`` and every shed future resolves with
+  ``DeadlineExceededError`` inside the same latency budget (failing fast
+  IS the product: callers can retry elsewhere);
+* **bounded queue + bounded RSS** — max queue depth never exceeds
+  ``max_queue`` and the process high-water RSS grows less than 512 MiB
+  across all three load runs (overload must not convert into memory);
+* **zero hung futures** — every request resolves, served or failed;
+* **brownout enters AND exits** — the controller leaves HEALTHY under
+  load (>= 1 BROWNOUT entry on the way up or the way down — a pressure
+  spike may jump straight to SHED, but de-escalation always passes
+  through BROWNOUT) and recovers to HEALTHY after the storm drains.
+
+``--json PATH`` writes ``BENCH_overload.json`` (before the asserts, so CI
+keeps the trajectory through a regression).  Run standalone:
+
+  PYTHONPATH=src python -m benchmarks.fig20_overload [--smoke] [--json F]
+"""
+import json
+import resource
+import time
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.engine import SparseEngine
+from repro.runtime.faults import FaultPlan
+from repro.runtime.overload import (
+    BROWNOUT,
+    HEALTHY,
+    SHED,
+    BrownoutController,
+    DeadlineExceededError,
+    OverloadError,
+)
+from repro.tune import PlanCache
+
+from .common import row, suite
+
+SCALE = 1 / 64
+SEARCH_KW = dict(warmup=0, timed=1)  # the drill measures policy, not kernels
+DISPATCH_DELAY_S = 4e-3  # injected service cost per launch (capacity knob)
+MAX_QUEUE = 64
+SHED_AFTER_S = 0.05  # queued longer than this at a dispatch boundary: shed
+SLO_QUANTA = 8  # served p99 budget: SHED_AFTER_S + this many service quanta
+GOODPUT_FLOOR = 0.70  # of measured saturation capacity, at every multiple
+RSS_BUDGET_KB = 512 * 1024  # high-water growth across all load runs
+LOAD_MULTIPLES = (1, 2, 5)
+
+
+def _rss_kb() -> int:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+
+
+def _xs(rng, n: int, count: int) -> list:
+    return [
+        jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        for _ in range(count)
+    ]
+
+
+def _build(a, cache, *, brownout=None):
+    """One overload-protected engine with the slow-dispatch site armed."""
+    return SparseEngine(
+        a,
+        ks=(1, 4),
+        cache=cache,
+        faults=FaultPlan({"engine.overload": {"delay_s": DISPATCH_DELAY_S}}),
+        max_wait_s=0.0,  # dispatch immediately: the delay site is the pacer
+        max_queue=MAX_QUEUE,
+        overload_policy="reject",
+        shed_after_s=SHED_AFTER_S,
+        brownout=brownout,
+        **SEARCH_KW,
+    )
+
+
+def _measure_capacity(a, cache, rng) -> tuple[float, float]:
+    """Closed-loop saturation capacity (req/s) and the per-batch service
+    quantum (s) under the injected dispatch delay — full buckets, drain."""
+    eng = _build(a, cache)
+    xs = _xs(rng, a.shape[1], 48)
+    eng.run(xs[:4])  # compile outside the measured window
+    eng.stats = type(eng.stats)()
+    t0 = time.perf_counter()
+    reqs = [eng.submit(x) for x in xs]
+    eng.drain()
+    dt = time.perf_counter() - t0
+    assert all(r.done for r in reqs)
+    quantum = dt / max(1, eng.stats.n_dispatches)
+    eng.close()
+    return len(xs) / dt, quantum
+
+
+def _open_loop(eng, xs_pool, rate_rps: float, duration_s: float) -> dict:
+    """Drive one engine with an open-loop arrival schedule at ``rate_rps``
+    for ``duration_s``, then drain; returns the run's raw outcome."""
+    dt = 1.0 / rate_rps
+    reqs: list = []
+    rejected = 0
+    qmax = 0
+    i = 0
+    t0 = time.perf_counter()
+    t_next, t_end = t0, t0 + duration_s
+    while True:
+        now = time.perf_counter()
+        if now >= t_end:
+            break
+        # Open loop: submit every arrival whose scheduled time has passed —
+        # the generator never waits for completions, exactly like traffic.
+        while t_next <= now:
+            try:
+                reqs.append(eng.submit(xs_pool[i % len(xs_pool)]))
+            except OverloadError:
+                rejected += 1
+            i += 1
+            t_next += dt
+        eng.step()
+        qmax = max(qmax, eng.pending)
+    eng.drain()
+    t_total = time.perf_counter() - t0
+    offered = i
+    served = [r for r in reqs if r.done and not r.failed]
+    failed = [r for r in reqs if r.failed]
+    hung = [r for r in reqs if not r.done]
+    lat_served = sorted(r.latency_s for r in served)
+    lat_failed = sorted(r.latency_s for r in failed)
+    return {
+        "offered": offered,
+        "admitted": len(reqs),
+        "rejected": rejected,
+        "served": len(served),
+        "shed_after_admit": len(failed),
+        "hung": len(hung),
+        "untyped_failures": sum(
+            1 for r in failed if not isinstance(r._exc, OverloadError)
+        ),
+        "deadline_shed": sum(
+            1 for r in failed if isinstance(r._exc, DeadlineExceededError)
+        ),
+        "goodput_rps": len(served) / t_total,
+        "served_p99_s": (
+            float(np.quantile(np.asarray(lat_served), 0.99))
+            if lat_served
+            else 0.0
+        ),
+        "shed_p99_s": (
+            float(np.quantile(np.asarray(lat_failed), 0.99))
+            if lat_failed
+            else 0.0
+        ),
+        "qmax": qmax,
+        "wall_s": round(t_total, 4),
+    }
+
+
+def main(lines: list, *, smoke: bool = False, json_path: str | None = None):
+    scale = 1 / 256 if smoke else SCALE
+    duration = 0.6 if smoke else 2.0
+    a = suite(scale)["cant"]
+    rng = np.random.default_rng(0)
+    cache = PlanCache()  # shared: the search runs once across all engines
+    rss_before = _rss_kb()
+
+    capacity, quantum = _measure_capacity(a, cache, rng)
+    slo_s = SHED_AFTER_S + SLO_QUANTA * quantum
+    report: dict = {
+        "capacity_rps": round(capacity, 2),
+        "service_quantum_s": round(quantum, 6),
+        "dispatch_delay_s": DISPATCH_DELAY_S,
+        "max_queue": MAX_QUEUE,
+        "shed_after_s": SHED_AFTER_S,
+        "served_slo_s": round(slo_s, 4),
+        "goodput_floor_rps": round(GOODPUT_FLOOR * capacity, 2),
+        "loads": {},
+    }
+    lines.append(row(
+        "fig20_capacity", quantum,
+        f"capacity_rps={capacity:.1f};quantum_s={quantum:.4f}"))
+
+    xs_pool = _xs(rng, a.shape[1], 16)
+    for mult in LOAD_MULTIPLES:
+        ctrl = BrownoutController(min_dwell_s=0.02)
+        eng = _build(a, cache, brownout=ctrl)
+        eng.run(xs_pool[:4])  # compile outside the driven window
+        eng.stats = type(eng.stats)()
+        out = _open_loop(eng, xs_pool, mult * capacity, duration)
+        # Recovery: keep stepping the idle engine so the controller sees
+        # the drained queue and walks back to HEALTHY through BROWNOUT.
+        t_rec0 = time.perf_counter()
+        deadline = t_rec0 + 5.0
+        while ctrl.state != HEALTHY and time.perf_counter() < deadline:
+            eng.step()
+            time.sleep(0.005)
+        out["recovery_s"] = round(time.perf_counter() - t_rec0, 4)
+        out["brownout"] = ctrl.summary()
+        out["brownout_entries"] = ctrl.entries(BROWNOUT)
+        out["shed_entries"] = ctrl.entries(SHED)
+        out["recovered_healthy"] = ctrl.state == HEALTHY
+        out["stats"] = {
+            k: eng.stats.summary()[k]
+            for k in ("rejected", "shed_oldest", "shed_deadline",
+                      "dispatches")
+        }
+        eng.close()
+        report["loads"][f"{mult}x"] = out
+        lines.append(row(
+            f"fig20_load_{mult}x", out["served_p99_s"],
+            f"goodput_rps={out['goodput_rps']:.1f};"
+            f"served={out['served']};rejected={out['rejected']};"
+            f"shed={out['shed_after_admit']};"
+            f"brownout={out['brownout']['state']}"))
+
+    report["rss_growth_kb"] = _rss_kb() - rss_before
+    if json_path:  # written before the asserts: CI keeps the trajectory
+        Path(json_path).write_text(json.dumps(report, indent=1, sort_keys=True))
+
+    if smoke:
+        for mult in LOAD_MULTIPLES:
+            o = report["loads"][f"{mult}x"]
+            assert o["hung"] == 0, f"{mult}x: hung futures: {o}"
+            assert o["untyped_failures"] == 0, (
+                f"{mult}x: shed futures must carry OverloadError/"
+                f"DeadlineExceededError: {o}")
+            assert o["qmax"] <= MAX_QUEUE, (
+                f"{mult}x: queue depth exceeded max_queue: {o}")
+        deep = report["loads"]["5x"]
+        assert deep["goodput_rps"] >= GOODPUT_FLOOR * capacity, (
+            f"5x: goodput {deep['goodput_rps']:.1f} req/s fell below "
+            f"{GOODPUT_FLOOR:.0%} of capacity {capacity:.1f} req/s — "
+            "overload is stealing service time")
+        assert deep["served_p99_s"] <= slo_s, (
+            f"5x: served p99 {deep['served_p99_s'] * 1e3:.1f}ms past the "
+            f"SLO {slo_s * 1e3:.1f}ms — late work should have been shed")
+        assert deep["shed_p99_s"] <= slo_s, (
+            f"5x: shed futures resolved slowly "
+            f"({deep['shed_p99_s'] * 1e3:.1f}ms p99) — shedding must fail "
+            "fast to be worth anything")
+        assert deep["rejected"] + deep["shed_after_admit"] > 0, (
+            f"5x offered load never tripped admission: {deep}")
+        assert deep["brownout_entries"] >= 1, (
+            f"5x: controller never entered BROWNOUT: {deep['brownout']}")
+        assert deep["recovered_healthy"], (
+            f"5x: controller stuck in {deep['brownout']['state']} after "
+            "the storm drained — brownout must EXIT, not just enter")
+        assert report["rss_growth_kb"] < RSS_BUDGET_KB, (
+            f"RSS grew {report['rss_growth_kb']} KB across the load runs "
+            f"(budget {RSS_BUDGET_KB} KB) — overload is converting into "
+            "memory")
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small scale + gated claims for CI")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write overload-drill metrics to this JSON file")
+    args = ap.parse_args()
+    lines = ["name,us_per_call,derived"]
+    main(lines, smoke=args.smoke, json_path=args.json)
+    print("\n".join(lines))
+    print("# fig20 ok", file=sys.stderr)

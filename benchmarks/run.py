@@ -35,6 +35,7 @@ def main() -> None:
         fig17_solver,
         fig18_fleet,
         fig19_chaos,
+        fig20_overload,
         table2_register_blocking,
     )
 
@@ -58,6 +59,7 @@ def main() -> None:
         "fig17": fig17_solver,
         "fig18": fig18_fleet,
         "fig19": fig19_chaos,
+        "fig20": fig20_overload,
     }
     only = set(args.only.split(",")) if args.only else None
     lines: list = ["name,us_per_call,derived"]

@@ -49,6 +49,22 @@ from pathlib import Path
 from repro.configs import ARCH_IDS, get_config, get_reduced
 
 
+def _overload_kwargs(args) -> dict:
+    """Map the overload CLI flags onto SparseEngine/SparseFleet kwargs
+    (both take the same names, so one helper serves both launchers)."""
+    kw: dict = {}
+    if args.max_queue > 0:
+        kw["max_queue"] = args.max_queue
+        kw["overload_policy"] = args.overload_policy
+    if args.shed_after_ms > 0:
+        kw["shed_after_s"] = args.shed_after_ms / 1e3
+    if args.brownout:
+        from repro.runtime.overload import BrownoutController
+
+        kw["brownout"] = BrownoutController()
+    return kw
+
+
 def serve_sparse(args) -> None:
     import jax.numpy as jnp
 
@@ -63,6 +79,7 @@ def serve_sparse(args) -> None:
     ks = tuple(int(k) for k in args.k_buckets.split(","))
     a = generate(args.sparse, scale=args.scale)
     max_wait_s = args.max_wait_ms / 1e3 if args.max_wait_ms else None
+    overload_kw = _overload_kwargs(args)
     t0 = time.perf_counter()
     if args.mesh_shards > 1:
         if args.shards > 1:
@@ -73,12 +90,12 @@ def serve_sparse(args) -> None:
 
         mesh = make_spmm_mesh(args.mesh_shards)
         eng = SparseEngine(a, ks=ks, mesh=mesh, max_wait_s=max_wait_s,
-                           async_depth=args.async_depth)
+                           async_depth=args.async_depth, **overload_kw)
     else:
         mesh = None
         eng = SparseEngine(a, ks=ks, n_shards=args.shards,
                            max_wait_s=max_wait_s,  # on-disk plan cache
-                           async_depth=args.async_depth)
+                           async_depth=args.async_depth, **overload_kw)
     t_build = time.perf_counter() - t0
     rng = np.random.default_rng(0)
     xs = [
@@ -95,8 +112,15 @@ def serve_sparse(args) -> None:
             xs = [jax.device_put(x, x_sharding) for x in xs]
     eng.run(xs[: min(len(xs), max(ks))])  # compile outside the timed window
     eng.stats = type(eng.stats)()  # measure the steady state only
+    from repro.runtime.overload import OverloadError
+
     t0 = time.perf_counter()
-    reqs = [eng.submit(x) for x in xs]  # offered load: all pending at once
+    reqs, refused = [], 0
+    for x in xs:  # offered load: all pending at once
+        try:
+            reqs.append(eng.submit(x))
+        except OverloadError:
+            refused += 1  # typed refusal — an open-loop caller backs off
     if max_wait_s is None:
         eng.drain()
     else:
@@ -108,7 +132,9 @@ def serve_sparse(args) -> None:
                 time.sleep(min(max_wait_s / 4, 1e-3))
         eng.flush()  # retire the async in-flight window
     dt = time.perf_counter() - t0
-    flops = 2 * a.nnz * len(xs)
+    served = [r for r in reqs if not r.failed]
+    shed = len(reqs) - len(served)
+    flops = 2 * a.nnz * len(served)
     s = eng.stats.summary()
     plans = {k: op.plan.candidate.key() for k, op in eng.ops.items()}
     if args.mesh_shards > 1:
@@ -122,13 +148,18 @@ def serve_sparse(args) -> None:
         src = "k-indexed plan table from cache"
     else:
         src = f"searched in {t_build:.1f}s"
-    lat = sorted(r.latency_s for r in reqs)
+    lat = sorted(r.latency_s for r in served) or [0.0]
     raced = sum(op.plan.n_raced for op in eng.ops.values())
+    overload = (
+        f" [overload: refused={refused} shed={shed}]"
+        if refused or shed else ""
+    )
     print(
-        f"served {len(xs)} spmv requests on {args.sparse}@{args.scale:g} "
+        f"served {len(served)}/{len(xs)} spmv requests on "
+        f"{args.sparse}@{args.scale:g} "
         f"({a.shape[0]}x{a.shape[1]}, nnz={a.nnz}) in {dt:.3f}s "
-        f"({len(xs) / dt:.1f} req/s, {flops / dt / 1e9:.2f} GF/s, "
-        f"async_depth={eng.async_depth})\n"
+        f"({len(served) / dt:.1f} req/s, {flops / dt / 1e9:.2f} GF/s, "
+        f"async_depth={eng.async_depth}){overload}\n"
         f"  dispatches={s['dispatches']} by_bucket={s['by_bucket']} "
         f"occupancy={s['occupancy']:.2f} "
         f"(padding {s['padded_occupancy']:.2f} — not served work) "
@@ -145,8 +176,10 @@ def serve_sparse(args) -> None:
                 "matrix": args.sparse,
                 "scale": args.scale,
                 "requests": len(xs),
+                "served": len(served),
+                "refused": refused,
                 "elapsed_s": round(dt, 6),
-                "req_per_s": round(len(xs) / dt, 3),
+                "req_per_s": round(len(served) / dt, 3),
                 "gflops": round(flops / dt / 1e9, 4),
                 "plans": plans,
                 "engine": s,
@@ -178,7 +211,8 @@ def serve_fleet(args) -> None:
     ks = tuple(int(k) for k in args.k_buckets.split(","))
     max_wait_s = args.max_wait_ms / 1e3 if args.max_wait_ms else None
     fleet = SparseFleet(ks=ks, max_wait_s=max_wait_s,
-                        async_depth=args.async_depth)
+                        async_depth=args.async_depth,
+                        **_overload_kwargs(args))
     rng = np.random.default_rng(0)
     mats = {}
     t0 = time.perf_counter()
@@ -193,12 +227,20 @@ def serve_fleet(args) -> None:
         ]
         for t in tenants
     }
+    from repro.runtime.overload import OverloadError
+
     t0 = time.perf_counter()
-    reqs = []
+    reqs, refused = [], 0
     for i in range(args.requests):  # interleave tenants: shared-device load
         for t in tenants:
-            reqs.append(fleet.submit(t, xs[t][i]))
-    while any(r._ys is None for r in reqs):
+            try:
+                reqs.append(fleet.submit(t, xs[t][i]))
+            except OverloadError:
+                refused += 1  # typed refusal — the caller backs off
+                fleet.step()  # ...and drains a batch before the next offer
+    # ``done`` (result OR exception) — a shed/deadline-failed future never
+    # gets a ``_ys``, so polling that would spin forever.
+    while not all(r.done for r in reqs):
         if fleet.step() == 0:
             fleet.flush()
             if max_wait_s:
@@ -208,10 +250,17 @@ def serve_fleet(args) -> None:
     fleet.wait_retunes(timeout=args.retune_wait_s)
     fleet.close()
     summary = fleet.stats().summary()
+    served = sum(1 for r in reqs if not r.failed)
     total = len(reqs)
+    overload = (
+        f" [overload: refused={refused} shed={total - served}]"
+        if refused or served < total else ""
+    )
     print(
-        f"fleet served {total} requests over {len(tenants)} tenants "
-        f"({', '.join(tenants)}) in {dt:.3f}s ({total / dt:.1f} req/s); "
+        f"fleet served {served}/{total + refused} requests over "
+        f"{len(tenants)} tenants "
+        f"({', '.join(tenants)}) in {dt:.3f}s "
+        f"({served / dt:.1f} req/s){overload}; "
         f"admitted in {t_admit:.3f}s "
         f"(cache={summary['cache_admissions']} "
         f"predicted={summary['predicted_admissions']}; "
@@ -231,8 +280,10 @@ def serve_fleet(args) -> None:
                 "tenants": tenants,
                 "scale": args.scale,
                 "requests": total,
+                "served": served,
+                "refused": refused,
                 "elapsed_s": round(dt, 6),
-                "req_per_s": round(total / dt, 3),
+                "req_per_s": round(served / dt, 3),
                 "admit_s": round(t_admit, 6),
                 "fleet": summary,
             },
@@ -305,6 +356,25 @@ def main():
                     help="in-flight dispatch window (0 = fully synchronous; "
                          "2 = double-buffered: batch t+1 assembles while "
                          "batch t computes)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bounded admission: cap the pending queue at this "
+                         "many requests (per tenant under --fleet; "
+                         "0 = unbounded, the pre-PR-10 behavior)")
+    ap.add_argument("--overload-policy", default="reject",
+                    choices=("reject", "shed-oldest", "block"),
+                    help="what submit() does at a full queue: reject fast "
+                         "with a typed OverloadError, evict the oldest "
+                         "queued request, or block (bounded) for space")
+    ap.add_argument("--shed-after-ms", type=float, default=0.0,
+                    help="deadline-aware shedding: fail queued requests "
+                         "typed (DeadlineExceededError) once they have "
+                         "waited this long at a dispatch boundary "
+                         "(0 = never shed)")
+    ap.add_argument("--brownout", action="store_true",
+                    help="arm a BrownoutController (default watermarks): "
+                         "under sustained pressure serving degrades "
+                         "gracefully (widest-bucket dispatch, paused "
+                         "retune/repair, SHED refusals) and recovers")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)

@@ -56,6 +56,29 @@ back while more requests may still arrive, but dispatches it as soon as the
 oldest pending request has waited that long — a single request under SLO
 never waits for a wide bucket to fill.
 
+**Overload protection** (``runtime.overload``).  The paper's saturation
+finding — past the memory-latency knee, extra concurrent work buys no
+throughput and only adds latency — is enforced as serving discipline:
+
+* ``max_queue`` bounds the pending queue; ``overload_policy`` picks what a
+  full queue does to ``submit()``: ``"reject"`` fails fast with a typed
+  :class:`OverloadError`, ``"shed-oldest"`` evicts the oldest queued
+  request (failing ITS future) to admit the new one, ``"block"`` waits up
+  to ``block_timeout_s`` for space (driving the serving loop if no other
+  thread is) and then rejects.
+* ``shed_after_s`` is deadline-aware load shedding: a request still queued
+  when its wait exceeds this lapses at dispatch time — failed fast via
+  ``set_exception`` with :class:`DeadlineExceededError` instead of
+  occupying a bucket slot computing an answer nobody is waiting for.
+  Counted in ``EngineStats.shed_deadline``.
+* ``brownout=`` attaches a :class:`repro.runtime.overload.
+  BrownoutController`; the engine feeds it queue-depth / oldest-age /
+  prep-byte pressure each ``step()`` (unless ``brownout_update=False`` —
+  the fleet drives a shared controller itself) and degrades by state:
+  BROWNOUT pins dispatch to the widest k-bucket and pauses the background
+  repair prober; SHED additionally rejects NEW submissions fast while the
+  queue keeps draining.  Transitions are published as supervisor events.
+
     eng = SparseEngine(a)            # tunes (or cache-loads) all buckets
     reqs = [eng.submit(x) for x in xs]
     eng.drain()                      # dispatches k-bucketed batches
@@ -80,6 +103,14 @@ from repro.core.formats import CSRMatrix
 from repro.core.partition import rows_balanced, stack_csr_shards
 from repro.runtime.executable import finite_guard, fused_batch_executable
 from repro.runtime.faults import FaultPlan, InjectedFault, active_plan
+from repro.runtime.overload import (
+    HEALTHY,
+    SHED,
+    BrownoutController,
+    DeadlineExceededError,
+    EngineClosedError,
+    OverloadError,
+)
 from repro.runtime.supervisor import (
     FALLBACK_TIERS,
     NonFiniteOutput,
@@ -87,11 +118,29 @@ from repro.runtime.supervisor import (
     fallback_op,
 )
 from repro.tune import PlanCache, SparseOperator
+from repro.tune.operator import prep_memo_stats
 from repro.tune.operator import runner as _bind_runner
 
-__all__ = ["SparseEngine", "EngineRequest", "EngineStats", "K_BUCKETS"]
+__all__ = [
+    "SparseEngine",
+    "EngineRequest",
+    "EngineStats",
+    "K_BUCKETS",
+    "OVERLOAD_POLICIES",
+    "OverloadError",
+    "DeadlineExceededError",
+    "EngineClosedError",
+]
 
 K_BUCKETS = (1, 4, 16, 64)
+
+OVERLOAD_POLICIES = ("reject", "shed-oldest", "block")
+
+# Condition-wait granularity for blocked callers (result(timeout=), block-
+# policy submits): bounded so a deadline stays honored even when nothing
+# ever notifies (a wedged device), but callers wake EARLY on every
+# retirement/failure notification instead of polling.
+_WAIT_QUANTUM_S = 0.005
 
 
 @dataclasses.dataclass(slots=True)
@@ -139,6 +188,8 @@ class EngineRequest:
         blocking forever on a batch that will never retire."""
         self._exc = exc
         self.t_done = time.perf_counter()
+        if self._engine is not None:
+            self._engine._notify()  # wake callers blocked in result()
 
     def result(self, timeout: float | None = None) -> jax.Array:
         """Block until this request resolves; returns y (the future API).
@@ -188,6 +239,14 @@ class EngineStats:
     retries: int = 0
     demotions: int = 0
     promotions: int = 0
+    # Overload counters (runtime.overload): rejected never entered the
+    # queue (reject policy / block timeout / SHED state — the exception
+    # surfaced at submit); shed_oldest were queued but evicted to admit
+    # newer work; shed_deadline lapsed past shed_after_s before dispatch.
+    # Shed/rejected requests never enter the latency or occupancy figures.
+    rejected: int = 0
+    shed_oldest: int = 0
+    shed_deadline: int = 0
 
     def record(self, bucket, n_real: int, lats: Iterable[float]) -> None:
         self.n_dispatches += 1
@@ -238,6 +297,9 @@ class EngineStats:
             "retries": self.retries,
             "demotions": self.demotions,
             "promotions": self.promotions,
+            "rejected": self.rejected,
+            "shed_oldest": self.shed_oldest,
+            "shed_deadline": self.shed_deadline,
         }
 
 
@@ -303,6 +365,12 @@ class SparseEngine:
         mesh: Any = None,
         axis: str | None = None,
         max_wait_s: float | None = None,
+        max_queue: int | None = None,
+        overload_policy: str = "reject",
+        block_timeout_s: float = 1.0,
+        shed_after_s: float | None = None,
+        brownout: BrownoutController | None = None,
+        brownout_update: bool = True,
         async_depth: int = 2,
         legacy_dispatch: bool = False,
         strict_dtype: bool = False,
@@ -333,6 +401,24 @@ class SparseEngine:
             mesh.axis_names[0] if mesh is not None else None
         )
         self.max_wait_s = max_wait_s
+        if overload_policy not in OVERLOAD_POLICIES:
+            raise ValueError(
+                f"overload_policy {overload_policy!r} is not one of "
+                f"{OVERLOAD_POLICIES}"
+            )
+        if max_queue is not None and int(max_queue) < 1:
+            raise ValueError("max_queue must be >= 1 (None = unbounded)")
+        self.max_queue = None if max_queue is None else int(max_queue)
+        self.overload_policy = overload_policy
+        self.block_timeout_s = float(block_timeout_s)
+        self.shed_after_s = (
+            None if shed_after_s is None else float(shed_after_s)
+        )
+        # Brownout: the engine owns and updates its controller unless the
+        # fleet injected a shared one (brownout_update=False) that it
+        # drives with fleet-wide pressure itself.
+        self._brownout = brownout
+        self._brownout_update = bool(brownout_update)
         self.n_shards = int(n_shards)
         # The ring double-buffers across consecutive batches, so at most two
         # dispatches can be in flight before a buffer must be reused.
@@ -388,6 +474,22 @@ class SparseEngine:
         self._queue: deque[EngineRequest] = deque()
         self._inflight: deque[tuple] = deque()  # (ys, reqs, bucket, take)
         self._rid = 0
+        # Blocked callers (result(timeout=), block-policy submits) sleep on
+        # this condition and are notified at every retirement/failure
+        # instead of burning a poll loop; _serve_lock elects ONE of them to
+        # drive the engine while the rest wait.
+        self._cond = threading.Condition()
+        self._serve_lock = threading.Lock()
+        if self._brownout is not None and self._brownout_update:
+            # Publish this engine's brownout transitions as supervisor
+            # events (a fleet-shared controller is published by the fleet).
+            sup, nm = self.supervisor, name
+            self._brownout.add_listener(
+                lambda tr: sup.record(
+                    "brownout", engine=nm, frm=tr.frm, to=tr.to,
+                    pressure=round(tr.pressure, 4),
+                )
+            )
         self._execs: dict[int, Any] = {}  # bucket -> persistent executable
         self._batch_fns: dict[int, Any] = {}  # legacy: bucket -> jitted stack
         # Hot-swap staging: a background tuner builds a better plan table and
@@ -461,12 +563,83 @@ class SparseEngine:
             x = jnp.asarray(x, jnp.float32)
         elif not isinstance(x, jax.Array):
             x = jnp.asarray(x)
+        self._admit_one()
         req = EngineRequest(rid=self._rid, x=x, t_submit=time.perf_counter(),
                             _engine=self)
         self._rid += 1
         self._queue.append(req)
         self.stats.n_requests += 1
         return req
+
+    # -- bounded admission (runtime.overload) -------------------------------
+    def _admit_one(self) -> None:
+        """Gate one submission against the queue bound and brownout state.
+
+        SHED state rejects outright (typed, microseconds — the brownout
+        ladder's last rung protects the work already queued).  A full queue
+        applies ``overload_policy``: ``reject`` raises
+        :class:`OverloadError`; ``shed-oldest`` evicts the head request —
+        the one closest to lapsing anyway — failing its future so FIFO
+        order among survivors is untouched; ``block`` waits up to
+        ``block_timeout_s`` for space, driving the serving loop itself when
+        no other thread holds it, then rejects.
+        """
+        b = self._brownout
+        if b is not None and b.state == SHED:
+            self.stats.rejected += 1
+            raise OverloadError(
+                f"engine {self.name or 'unnamed'} is shedding load "
+                f"(brownout state={b.state}, pressure="
+                f"{b.pressure_last:.2f}); resubmit after recovery"
+            )
+        if self.max_queue is None or len(self._queue) < self.max_queue:
+            return
+        if self.overload_policy == "reject":
+            self.stats.rejected += 1
+            raise OverloadError(
+                f"engine {self.name or 'unnamed'} queue is full "
+                f"({len(self._queue)}/{self.max_queue} pending, "
+                f"policy=reject); back off and resubmit"
+            )
+        if self.overload_policy == "shed-oldest":
+            victim = self._queue.popleft()
+            victim.set_exception(
+                OverloadError(
+                    f"request {victim.rid} shed: engine "
+                    f"{self.name or 'unnamed'} queue hit max_queue="
+                    f"{self.max_queue} (policy=shed-oldest) and a newer "
+                    "request displaced it"
+                )
+            )
+            self.stats.shed_oldest += 1
+            return
+        # block: wait for space, bounded.  One thread at a time may drive
+        # the engine to make that space; the rest sleep on the condition
+        # and are woken by each retirement.
+        deadline = time.perf_counter() + self.block_timeout_s
+        while len(self._queue) >= self.max_queue:
+            now = time.perf_counter()
+            if now >= deadline:
+                self.stats.rejected += 1
+                raise OverloadError(
+                    f"engine {self.name or 'unnamed'} queue still full "
+                    f"({len(self._queue)}/{self.max_queue}) after blocking "
+                    f"{self.block_timeout_s:.3f}s (policy=block)"
+                )
+            if self._serve_lock.acquire(blocking=False):
+                try:
+                    if self.step() > 0:
+                        continue
+                    self._retire_ready()
+                    if len(self._queue) < self.max_queue:
+                        return
+                finally:
+                    self._serve_lock.release()
+            with self._cond:
+                if len(self._queue) >= self.max_queue:
+                    self._cond.wait(
+                        timeout=min(_WAIT_QUANTUM_S, deadline - now)
+                    )
 
     # -- sparse RHS ---------------------------------------------------------
     def submit_sparse(self, indices, values) -> EngineRequest:
@@ -489,6 +662,15 @@ class SparseEngine:
         the returned future behaves exactly like a dense one.
         """
         self._check_open()
+        b = self._brownout
+        if b is not None and b.state == SHED:
+            # Sparse requests dispatch immediately (no queue to bound), but
+            # SHED refuses them the same way: new work is new load.
+            self.stats.rejected += 1
+            raise OverloadError(
+                f"engine {self.name or 'unnamed'} is shedding load "
+                f"(brownout state={b.state}); resubmit after recovery"
+            )
         if self.mesh is not None or self.n_shards > 1:
             raise NotImplementedError(
                 "submit_sparse is single-device for now: distributed SpMSpV "
@@ -608,8 +790,58 @@ class SparseEngine:
     # -- dispatch -----------------------------------------------------------
     def _bucket_for(self, n_pending: int) -> tuple[int, int]:
         take = min(n_pending, self.ks[-1])
+        if self._brownout is not None and self._brownout.state != HEALTHY:
+            # Browned out: pin dispatch to the widest k-bucket — under a
+            # backlog batches are full anyway, and one executable with
+            # maximal SpMM amortization is the highest-goodput way through.
+            return self.ks[-1], take
         bucket = next(k for k in self.ks if k >= take)
         return bucket, take
+
+    def _overload_pressure(self) -> float:
+        """Scalar overload pressure in [0, 1+] for the brownout controller:
+        max of queue fill (vs ``max_queue``), oldest-request age (vs the
+        shed deadline, or 4x the SLO when only ``max_wait_s`` is set — at
+        healthy load the head request never waits past one SLO), and the
+        process-wide prepared-dict byte pressure."""
+        q = (len(self._queue) / self.max_queue) if self.max_queue else None
+        ref = self.shed_after_s
+        if ref is None and self.max_wait_s:
+            ref = 4.0 * self.max_wait_s
+        age = None
+        if ref and self._queue:
+            age = (time.perf_counter() - self._queue[0].t_submit) / ref
+        st = prep_memo_stats()
+        prep = (
+            st["resident_bytes"] / st["budget_bytes"]
+            if st["budget_bytes"] > 0
+            else None
+        )
+        return BrownoutController.pressure(queue=q, age=age, prep=prep)
+
+    def _shed_lapsed(self) -> None:
+        """Deadline-aware load shedding: fail queued requests whose wait
+        already exceeds ``shed_after_s`` at dispatch time — fast, typed,
+        via the ``set_exception`` path — instead of spending a bucket slot
+        on an answer nobody is waiting for.  FIFO makes the head the oldest
+        request, so the scan stops at the first survivor."""
+        if self.shed_after_s is None or not self._queue:
+            return
+        now = time.perf_counter()
+        while (
+            self._queue
+            and now - self._queue[0].t_submit > self.shed_after_s
+        ):
+            req = self._queue.popleft()
+            req.set_exception(
+                DeadlineExceededError(
+                    f"request {req.rid} lapsed: waited "
+                    f"{now - req.t_submit:.4f}s > shed_after_s="
+                    f"{self.shed_after_s:.4f}s before dispatch on engine "
+                    f"{self.name or 'unnamed'}"
+                )
+            )
+            self.stats.shed_deadline += 1
 
     def step(self, *, force: bool = False) -> int:
         """Dispatch one aggregated batch; returns #requests dispatched.
@@ -630,6 +862,9 @@ class SparseEngine:
         bypasses the wait and flushes immediately.
         """
         self._apply_pending_swap()  # dispatch boundary: adopt a staged table
+        if self._brownout is not None and self._brownout_update:
+            self._brownout.update(self._overload_pressure())
+        self._shed_lapsed()  # deadline shedding happens AT dispatch time
         if not self._queue:
             self._retire_ready()  # idle: resolve futures promptly
             return 0
@@ -647,6 +882,7 @@ class SparseEngine:
         bucket, take = self._bucket_for(len(self._queue))
         pop = self._queue.popleft
         reqs = [pop() for _ in range(take)]
+        self._notify()  # queue space freed: wake submitters blocked on it
 
         if self.legacy_dispatch:
             return self._step_legacy(reqs, bucket, take)
@@ -674,20 +910,49 @@ class SparseEngine:
 
     def _check_open(self) -> None:
         if self._closed:
-            raise RuntimeError(
+            raise EngineClosedError(
                 f"SparseEngine {self.name or 'unnamed'} is closed: submit "
                 "after close() would enqueue into a dead serving loop — "
                 "build a new engine (plans are cached, so it is cheap)"
             )
 
-    def close(self) -> None:
-        """Drain every outstanding request, then refuse new submissions and
-        stop the background repair thread.  Idempotent."""
+    def close(self, drain: bool = True) -> None:
+        """Refuse new submissions and stop the background repair thread.
+        Idempotent.
+
+        ``drain=True`` (the default) serves every outstanding request
+        first — close is graceful.  ``drain=False`` aborts: every future
+        still queued or in flight fails immediately with a typed
+        :class:`EngineClosedError`, so a caller blocked in ``result()``
+        raises instead of hanging on an engine nobody will ever drive
+        again.
+        """
         if self._closed:
             return
-        self.drain()
+        if drain:
+            self.drain()
         self._closed = True
+        if not drain:
+            exc = EngineClosedError(
+                f"SparseEngine {self.name or 'unnamed'} closed with "
+                "drain=False: this request was abandoned, not served"
+            )
+            aborted = 0
+            while self._queue:
+                self._queue.popleft().set_exception(exc)
+                aborted += 1
+            while self._inflight:
+                _ys, _ok, reqs, _bucket, take = self._inflight.popleft()
+                for req in reqs:
+                    req.set_exception(exc)
+                aborted += take
+            self.stats.failed_requests += aborted
+            if aborted:
+                self.supervisor.record(
+                    "engine_aborted", engine=self.name, n_requests=aborted
+                )
         self._repair_stop.set()
+        self._notify()  # closed is a terminal resolution for any waiter
         t = self._repair_thread
         if t is not None and t.is_alive():
             t.join(timeout=5.0)
@@ -718,6 +983,13 @@ class SparseEngine:
         is off)."""
         faults = self.faults
         if faults is not None:
+            stall = faults.delay(
+                "engine.overload", engine=self.name, bucket=bucket
+            )
+            if stall > 0.0:
+                # Synthetic overload: a slow dispatch with a KNOWN service
+                # cost, so load tests measure capacity deterministically.
+                time.sleep(stall)
             faults.fire("engine.dispatch", engine=self.name, bucket=bucket)
         xs = self._assemble(reqs, bucket)
         if (
@@ -819,6 +1091,7 @@ class SparseEngine:
             lats.append(t_done - req.t_submit)
         self.stats.record(bucket, take, lats)
         self.consecutive_failures = 0
+        self._notify()  # futures resolved: wake callers blocked in result()
         return take
 
     def _nonfinite(self, bucket) -> NonFiniteOutput:
@@ -876,6 +1149,7 @@ class SparseEngine:
                 lats.append(t_done - req.t_submit)
             self.stats.record(bucket, take, lats)
             self.consecutive_failures = 0
+            self._notify()
             return take
         for req in reqs:
             req.bucket = bucket
@@ -962,6 +1236,13 @@ class SparseEngine:
         while not self._repair_stop.wait(interval):
             if not self._demoted:
                 return
+            if (
+                self._brownout is not None
+                and self._brownout.state != HEALTHY
+            ):
+                # Browned out: repair probes are device work stolen from
+                # serving — stay demoted (correct, slower) until recovery.
+                continue
             for bucket in [b for b in list(self._demoted)
                            if not isinstance(b, tuple)]:
                 saved = self._demote_saved.get(bucket)
@@ -1030,43 +1311,86 @@ class SparseEngine:
             served += self._retire_one()
         return served
 
+    def _notify(self) -> None:
+        """Wake every thread blocked in ``result()`` or a ``block``-policy
+        ``submit()`` — called whenever a future resolves or queue space
+        frees, so waiters sleep on a :class:`threading.Condition` instead
+        of burning CPU in a poll loop."""
+        with self._cond:
+            self._cond.notify_all()
+
     def _fulfill(self, req: EngineRequest, deadline: float | None = None) -> None:
         """Serve until ``req`` is done (the blocking half of its future).
 
-        Retires the in-flight window FIRST: a request whose batch is
-        already on device resolves without force-dispatching unrelated
-        queued requests past the ``max_wait_s`` admission gate.  Only when
-        ``req`` is still queued does the loop force dispatch — the caller
-        blocking on it overrides the gate for the queue ahead of it.
+        One caller at a time elects itself the *driver* (non-blocking
+        ``_serve_lock``) and serves the engine; every other blocked caller
+        sleeps on the engine condition and is woken by :meth:`_notify`
+        when futures resolve — no thread sleep-polls.
+
+        The driver retires the in-flight window FIRST: a request whose
+        batch is already on device resolves without force-dispatching
+        unrelated queued requests past the ``max_wait_s`` admission gate.
+        Only when ``req`` is still queued does the loop force dispatch —
+        the caller blocking on it overrides the gate for the queue ahead
+        of it.
 
         ``deadline`` (perf_counter time) bounds the wait: past it, a still
         unresolved request raises ``TimeoutError`` with its bucket/engine
         context instead of blocking forever on a wedged batch.
         """
         while not req.done:
-            if deadline is not None:
-                now = time.perf_counter()
-                if now >= deadline:
-                    raise TimeoutError(
-                        f"request {req.rid} (bucket={req.bucket}, engine="
-                        f"{self.name or 'unnamed'}) unresolved at timeout: "
-                        f"{self.pending} queued, {self.in_flight} in flight "
-                        "— the supervisor fails dead batches via "
-                        "set_exception, so a persistent timeout usually "
-                        "means nothing is driving step()"
-                    )
-                if self._inflight and not self._inflight[0][0].is_ready():
-                    # Poll instead of blocking so the deadline stays honored
-                    # even when the head batch never becomes ready.
-                    time.sleep(min(1e-3, max(0.0, deadline - now)))
-                    continue
-            if self._inflight:
-                self._retire_one()
+            now = time.perf_counter()
+            if deadline is not None and now >= deadline:
+                raise TimeoutError(
+                    f"request {req.rid} (bucket={req.bucket}, engine="
+                    f"{self.name or 'unnamed'}) unresolved at timeout: "
+                    f"{self.pending} queued, {self.in_flight} in flight "
+                    "— the supervisor fails dead batches via "
+                    "set_exception, so a persistent timeout usually "
+                    "means nothing is driving step()"
+                )
+            if not self._serve_lock.acquire(blocking=False):
+                # Another thread is already driving the engine: wait for
+                # its progress notification (bounded, so a deadline stays
+                # honored even if the driver wedges), then re-check.
+                with self._cond:
+                    if not req.done:
+                        t = _WAIT_QUANTUM_S
+                        if deadline is not None:
+                            t = min(t, max(0.0, deadline - now))
+                        self._cond.wait(timeout=t)
                 continue
-            if self.step(force=True) == 0:
-                if req.done:  # step's idle-path retire served it
+            try:
+                if req.done:
                     break
-                raise RuntimeError("request is not pending on this engine")
+                if (
+                    deadline is not None
+                    and self._inflight
+                    and not self._inflight[0][0].is_ready()
+                ):
+                    # Head batch still computing under a bounded wait: a
+                    # condition wait (woken early by any retire) replaces
+                    # the old 1 ms sleep-poll, honoring the deadline even
+                    # when the batch never becomes ready.
+                    with self._cond:
+                        self._cond.wait(
+                            timeout=min(
+                                _WAIT_QUANTUM_S,
+                                max(0.0, deadline - now),
+                            )
+                        )
+                    continue
+                if self._inflight:
+                    self._retire_one()
+                    continue
+                if self.step(force=True) == 0:
+                    if req.done:  # step's idle-path retire served it
+                        break
+                    raise RuntimeError(
+                        "request is not pending on this engine"
+                    )
+            finally:
+                self._serve_lock.release()
 
     # -- legacy (pre-hot-path) dispatch: fig15's measured baseline ----------
     def _step_legacy(self, reqs, bucket: int, take: int) -> int:
@@ -1084,6 +1408,7 @@ class SparseEngine:
             req.t_done = t_done
             req.bucket = bucket
         self.stats.record(bucket, take, (r.latency_s for r in reqs))
+        self._notify()
         return take
 
     def _dispatch_one(self, x: jax.Array) -> jax.Array:
@@ -1139,8 +1464,25 @@ class SparseEngine:
         return self.stats.occupied_cols - before
 
     def run(self, xs: Iterable[jax.Array]) -> list[jax.Array]:
-        """Convenience: submit all, drain, return results in submit order."""
-        reqs = [self.submit(x) for x in xs]
+        """Convenience: submit all, drain, return results in submit order.
+
+        A bounded engine (``max_queue`` + ``reject``, or a brownout in
+        SHED) refuses admission with :class:`OverloadError`; since run()
+        owns the serving loop anyway, it absorbs the backpressure itself —
+        drain a batch (or wait out a shedding brownout) and resubmit —
+        instead of surfacing the refusal to a caller with no queue to
+        manage.
+        """
+        reqs = []
+        for x in xs:
+            while True:
+                try:
+                    reqs.append(self.submit(x))
+                    break
+                except OverloadError:
+                    if self.step(force=True) == 0:
+                        self.flush()
+                        time.sleep(1e-3)  # shedding brownout: wait it out
         self.drain()
         return [r.y for r in reqs]
 

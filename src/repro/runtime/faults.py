@@ -13,6 +13,10 @@ site                  what fires there
 ``engine.nan``        a request column is poisoned with NaN before dispatch
                       (the "slab DMA returned garbage" failure mode; caught
                       by the engine's opt-in on-device finite guard)
+``engine.overload``   dispatch is SLOWED, not failed: the site's
+                      ``delay_s`` option stalls the serving thread before
+                      the launch — synthetic overload with a known service
+                      cost (the fig20 load generator's capacity knob)
 ``plan_cache.read``   the plan-cache JSON comes back torn (truncated at a
                       seeded offset), as after a kill mid-write
 ``fleet.retune``      the background measured search raises
@@ -29,10 +33,13 @@ active plan).  The env syntax is ``;``-separated site entries, each with
     REPRO_FAULTS="engine.dispatch:n=3:engine=bad"
 
 Per site: ``p`` is the fire probability (default 1.0), ``n`` caps how many
-times the site fires (default unlimited); any other key is a *context
-match* — the site only fires when the caller's context carries that value
-(``engine=bad`` scopes a storm to one tenant's engine).  ``seed=N`` is a
-plan-wide entry seeding the RNG, so probabilistic plans replay exactly.
+times the site fires (default unlimited), ``delay_s`` makes the site a
+slow-down instead of a failure (consumed through :meth:`FaultPlan.delay`
+by sites that support it, e.g. ``engine.overload``); any other key is a
+*context match* — the site only fires when the caller's context carries
+that value (``engine=bad`` scopes a storm to one tenant's engine).
+``seed=N`` is a plan-wide entry seeding the RNG, so probabilistic plans
+replay exactly.
 
 Every fire is appended to ``plan.log`` (a :class:`FaultEvent` with the
 site, sequence number and call context), so tests assert *which* fault
@@ -77,6 +84,7 @@ class _Site:
     name: str
     p: float = 1.0
     n: int | None = None  # remaining fires; None = unlimited
+    delay_s: float = 0.0  # slow-down sites: stall instead of raising
     match: dict[str, str] = dataclasses.field(default_factory=dict)
 
     def accepts(self, ctx: dict[str, Any]) -> bool:
@@ -137,10 +145,12 @@ class FaultPlan:
             opts = dict(opts)
             p = float(opts.pop("p", 1.0))
             n = opts.pop("n", None)
+            delay_s = float(opts.pop("delay_s", 0.0))
             self._sites[name] = _Site(
                 name=name,
                 p=p,
                 n=None if n is None else int(n),
+                delay_s=delay_s,
                 match={k: str(v) for k, v in opts.items()},
             )
         self.seed = int(seed)
@@ -172,6 +182,15 @@ class FaultPlan:
         """Raise ``exc`` when the site fires; no-op otherwise."""
         if self.should_fire(site, **ctx):
             raise exc(f"injected fault at {site} (ctx={ctx})")
+
+    def delay(self, site: str, **ctx: Any) -> float:
+        """Seconds the caller should stall when a slow-down site fires
+        (0.0 otherwise).  The caller sleeps OUTSIDE the plan lock — a slow
+        dispatch must not serialize other threads' fault checks."""
+        s = self._sites.get(site)
+        if s is None or s.delay_s <= 0.0:
+            return 0.0
+        return s.delay_s if self.should_fire(site, **ctx) else 0.0
 
     def corrupt_text(self, site: str, text: str, **ctx: Any) -> str:
         """Return ``text`` torn at a seeded offset when the site fires —

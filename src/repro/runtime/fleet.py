@@ -41,6 +41,19 @@ keeps its own ``max_wait_s`` admission gate, so a burst tenant fills wide
 buckets while a latency-sensitive one still dispatches partial buckets on
 time.
 
+**Overload protection** (PR 10, see ``runtime.overload``).  Per-tenant
+queue caps (``max_queue`` + ``overload_policy`` forwarded to every tenant
+engine), per-tenant token-bucket rate limits (``tenant_rate``/
+``tenant_burst``) so one tenant's burst fails fast with
+:class:`OverloadError` instead of consuming the shared queue budget, a
+*bounded* retune queue that coalesces duplicate requests per tenant, and
+an optional fleet-owned :class:`BrownoutController`: the fleet drives it
+from fleet-wide pressure in ``step()``, every tenant engine consults it
+(widest-bucket dispatch, SHED refusals) without updating it, the retune
+worker defers measured searches while browned out (re-queued on
+recovery), and residency eviction tightens to ``brownout_budget_frac`` of
+the byte budget.
+
     fleet = SparseFleet(budget_bytes=1 << 29)
     fleet.add_tenant("fem", a_fem, max_wait_s=5e-3)
     req = fleet.submit("fem", x)         # served on the predicted plan
@@ -62,6 +75,13 @@ import jax
 from repro.core.formats import CSRMatrix
 from repro.runtime.engine import K_BUCKETS, EngineRequest, SparseEngine
 from repro.runtime.faults import FaultPlan, active_plan
+from repro.runtime.overload import (
+    HEALTHY,
+    BrownoutController,
+    BrownoutTransition,
+    OverloadError,
+    TokenBucket,
+)
 from repro.runtime.supervisor import CircuitOpenError, Supervisor
 from repro.tune import (
     PlanCache,
@@ -79,6 +99,9 @@ __all__ = [
     "Tenant",
     "TRAFFIC_HALFLIFE_S",
     "CircuitOpenError",
+    "OverloadError",
+    "TokenBucket",
+    "BrownoutController",
 ]
 
 _ENV_BUDGET = "REPRO_FLEET_BUDGET_BYTES"
@@ -131,6 +154,11 @@ class Tenant:
     # step() skips it, so a poisoning tenant never stalls the scheduler.
     quarantined_until: float = 0.0
     n_quarantines: int = 0
+    # Fair-share admission: a token bucket (None = unlimited) consulted at
+    # submit — a greedy burst drains its OWN bucket and fails fast with
+    # OverloadError, never the shared queue budget.  The bucket survives
+    # eviction: rate limits are a tenant property, not a residency one.
+    bucket: TokenBucket | None = None
 
     @property
     def quarantined(self) -> bool:
@@ -178,6 +206,11 @@ class FleetStats:
     retune_errors: int = 0  # every retune attempt that raised (incl. retried)
     last_retune_error: str | None = None
     quarantines: int = 0  # circuit-breaker openings across all tenants
+    # Overload counters (runtime.overload):
+    rate_limited: int = 0  # token-bucket refusals at submit (fair share)
+    retunes_coalesced: int = 0  # duplicate requests folded into one queued
+    retunes_dropped: int = 0  # bounded retune queue was full; request lost
+    retunes_deferred: int = 0  # browned out: parked, re-queued on recovery
     _fleet: Any = dataclasses.field(default=None, repr=False, compare=False)
 
     def summary(self) -> dict[str, Any]:
@@ -190,6 +223,18 @@ class FleetStats:
         if fleet is not None:
             out["resident_bytes"] = fleet.resident_bytes
             out["budget_bytes"] = fleet.budget_bytes
+            engines = [
+                t.engine
+                for t in fleet._tenants.values()
+                if t.engine is not None
+            ]
+            out["rejected"] = sum(e.stats.rejected for e in engines)
+            out["shed_oldest"] = sum(e.stats.shed_oldest for e in engines)
+            out["shed_deadline"] = sum(
+                e.stats.shed_deadline for e in engines
+            )
+            if fleet._brownout is not None:
+                out["brownout"] = fleet._brownout.summary()
             out["swaps_applied"] = sum(
                 t.engine.swaps_applied
                 for t in fleet._tenants.values()
@@ -250,6 +295,15 @@ class SparseFleet:
         supervisor_kwargs: dict[str, Any] | None = None,
         nan_guard: bool = False,
         faults: FaultPlan | None = None,
+        max_queue: int | None = None,
+        overload_policy: str = "reject",
+        block_timeout_s: float = 1.0,
+        shed_after_s: float | None = None,
+        tenant_rate: float | None = None,
+        tenant_burst: float | None = None,
+        brownout: BrownoutController | None = None,
+        brownout_budget_frac: float = 0.5,
+        retune_queue_max: int = 32,
     ):
         self.ks = tuple(sorted({int(k) for k in ks}))
         self.cache = default_cache() if cache is None else cache
@@ -271,10 +325,32 @@ class SparseFleet:
         self.supervisor_kwargs = dict(supervisor_kwargs or {})
         self.nan_guard = bool(nan_guard)
         self.faults = faults if faults is not None else active_plan()
+        # Overload protection (runtime.overload): per-tenant queue caps,
+        # token-bucket fair share, and the fleet-owned brownout controller
+        # every tenant engine consults (but only the fleet updates — an
+        # idle tenant's empty queue must not vote the fleet healthy).
+        self.max_queue = max_queue
+        self.overload_policy = overload_policy
+        self.block_timeout_s = float(block_timeout_s)
+        self.shed_after_s = shed_after_s
+        self.tenant_rate = tenant_rate
+        self.tenant_burst = tenant_burst
+        self._brownout = brownout
+        self.brownout_budget_frac = float(brownout_budget_frac)
+        self.supervisor = Supervisor(**self.supervisor_kwargs)
+        if self._brownout is not None:
+            self._brownout.add_listener(self._on_brownout)
         self._tenants: dict[str, Tenant] = {}
         self._rr = 0  # rotating round-robin start for equal-deadline ties
         self.stats_fleet = FleetStats(_fleet=self)
-        self._retune_q: queue.Queue = queue.Queue()
+        # Bounded retune queue: a flapping tenant coalesces into ONE queued
+        # request (the pending set); overflow drops the request (counted) —
+        # a lost retune only pins the predicted plan, never correctness.
+        self._retune_q: queue.Queue = queue.Queue(
+            maxsize=max(1, int(retune_queue_max))
+        )
+        self._retune_pending: set[str] = set()
+        self._deferred_retunes: list[str] = []
         self._retune_thread: threading.Thread | None = None
         self._retune_lock = threading.Lock()  # guards thread start + counters
         self._closed = False
@@ -295,7 +371,12 @@ class SparseFleet:
         proceeds over budget (and is counted) — serving beats refusing.
         """
         now = time.perf_counter()
-        while self.resident_bytes + incoming > self.budget_bytes:
+        budget = self.budget_bytes
+        if self._brownout is not None and self._brownout.state != HEALTHY:
+            # Browned out: tighten residency — prepared-dict bytes are the
+            # pressure we can actually shed without failing requests.
+            budget = int(budget * self.brownout_budget_frac)
+        while self.resident_bytes + incoming > budget:
             victims = [
                 t for t in self._tenants.values() if t.resident and not t.busy
             ]
@@ -329,6 +410,8 @@ class SparseFleet:
         *,
         max_wait_s: float | None = None,
         retune: bool | None = None,
+        rate: float | None = None,
+        burst: float | None = None,
     ) -> Tenant:
         """Admit a matrix under ``name``; serving-ready on return.
 
@@ -336,9 +419,24 @@ class SparseFleet:
         transfer -> byte model), so no measured search runs on this path;
         predicted buckets are queued for the background retune (unless
         ``retune=False`` here or fleet-wide).
+
+        ``rate``/``burst`` (requests/s, token cap; default the fleet's
+        ``tenant_rate``/``tenant_burst``) arm this tenant's fair-share
+        token bucket — its submits fail fast with :class:`OverloadError`
+        once the bucket runs dry.
         """
         if name in self._tenants:
             raise ValueError(f"tenant {name!r} already exists")
+        rate = self.tenant_rate if rate is None else rate
+        bucket = None
+        if rate is not None:
+            if burst is None:
+                burst = (
+                    self.tenant_burst
+                    if self.tenant_burst is not None
+                    else 2.0 * rate
+                )
+            bucket = TokenBucket(rate, burst)
         tenant = Tenant(
             name=name,
             a=a,
@@ -346,6 +444,7 @@ class SparseFleet:
             max_wait_s=(
                 self.default_max_wait_s if max_wait_s is None else max_wait_s
             ),
+            bucket=bucket,
         )
         self._tenants[name] = tenant
         self._admit(tenant, retune=retune)
@@ -383,6 +482,16 @@ class SparseFleet:
             supervisor=Supervisor(**self.supervisor_kwargs),
             faults=self.faults,
             nan_guard=self.nan_guard,
+            max_queue=self.max_queue,
+            overload_policy=self.overload_policy,
+            block_timeout_s=self.block_timeout_s,
+            shed_after_s=self.shed_after_s,
+            # The engine CONSULTS the fleet controller (SHED refusals,
+            # widest-bucket dispatch, paused repair) but never updates it:
+            # only fleet-wide pressure — computed in fleet.step() — may
+            # move the state, or one idle tenant would vote for recovery.
+            brownout=self._brownout,
+            brownout_update=False,
         )
         tenant.nbytes = nbytes
         tenant.n_admissions += 1
@@ -396,7 +505,35 @@ class SparseFleet:
 
     # -- background retune --------------------------------------------------
     def _queue_retune(self, name: str) -> None:
+        """Enqueue a measured search for ``name`` — bounded and coalesced.
+
+        A tenant already queued coalesces (a flapping tenant enqueues ONE
+        search, not an unbounded backlog of redundant ones); a full queue
+        drops the request (counted — a lost retune pins the predicted
+        plan, never correctness).  While browned out the request is parked
+        in ``_deferred_retunes`` instead: the measured search is device
+        time the brownout exists to protect, and recovery re-queues it.
+        """
+        if self._brownout is not None and self._brownout.state != HEALTHY:
+            with self._retune_lock:
+                if (
+                    name not in self._deferred_retunes
+                    and name not in self._retune_pending
+                ):
+                    self._deferred_retunes.append(name)
+                    self.stats_fleet.retunes_deferred += 1
+            return
         with self._retune_lock:
+            if name in self._retune_pending:
+                self.stats_fleet.retunes_coalesced += 1
+                return
+            try:
+                self._retune_q.put_nowait(name)
+            except queue.Full:
+                self.stats_fleet.retunes_dropped += 1
+                return
+            self._retune_pending.add(name)
+            self.stats_fleet.retunes_queued += 1
             if self._retune_thread is None:
                 self._retune_thread = threading.Thread(
                     target=self._retune_worker,
@@ -404,8 +541,21 @@ class SparseFleet:
                     daemon=True,
                 )
                 self._retune_thread.start()
-        self.stats_fleet.retunes_queued += 1
-        self._retune_q.put(name)
+
+    def _on_brownout(self, tr: BrownoutTransition) -> None:
+        """Fleet-level brownout bookkeeping: publish the transition as a
+        supervisor event and, on recovery to HEALTHY, re-queue every
+        retune the brownout deferred."""
+        self.supervisor.record(
+            "brownout", frm=tr.frm, to=tr.to,
+            pressure=round(tr.pressure, 4),
+        )
+        if tr.to == HEALTHY:
+            with self._retune_lock:
+                deferred = self._deferred_retunes
+                self._deferred_retunes = []
+            for name in deferred:
+                self._queue_retune(name)
 
     def _retune_worker(self) -> None:
         while True:
@@ -413,6 +563,22 @@ class SparseFleet:
             if name is None:  # close() sentinel
                 self._retune_q.task_done()
                 return
+            with self._retune_lock:
+                # Unpend BEFORE running: a retune requested mid-search is
+                # new information (the cache just grew) and re-queues.
+                self._retune_pending.discard(name)
+            if (
+                self._brownout is not None
+                and self._brownout.state != HEALTHY
+            ):
+                # Browned out after queueing: park it; _on_brownout
+                # re-queues on recovery.
+                with self._retune_lock:
+                    if name not in self._deferred_retunes:
+                        self._deferred_retunes.append(name)
+                        self.stats_fleet.retunes_deferred += 1
+                self._retune_q.task_done()
+                continue
             try:
                 # Capped-backoff retry: a transient failure (device hiccup,
                 # injected fault) must not silently pin the predicted plan
@@ -523,6 +689,15 @@ class SparseFleet:
                 f"{remaining:.3f}s ({tenant.n_quarantines} quarantines so "
                 "far); resubmit after the cooldown"
             )
+        bucket = tenant.bucket
+        if bucket is not None and not bucket.try_take():
+            self.stats_fleet.rate_limited += 1
+            raise OverloadError(
+                f"tenant {name!r} rate-limited: token bucket dry "
+                f"(rate={bucket.rate:g}/s, burst={bucket.burst:g}) — the "
+                "burst fails fast instead of consuming the shared queue "
+                "budget"
+            )
         tenant.touch(time.perf_counter())
         if tenant.engine is None:
             self._admit(tenant)
@@ -539,6 +714,11 @@ class SparseFleet:
         still applies its own ``max_wait_s`` admission gate, so visiting a
         tenant early never force-flushes a partial bucket ahead of its SLO.
         """
+        if self._brownout is not None:
+            # The fleet is the ONE writer of the shared controller; engines
+            # only read it.  Update before the ready check so an idle fleet
+            # still recovers (pressure decays to zero with empty queues).
+            self._brownout.update(self._overload_pressure())
         ready = [
             t
             for t in self._tenants.values()
@@ -564,6 +744,20 @@ class SparseFleet:
             served += tenant.engine.step()
             self._check_breaker(tenant)
         return served
+
+    def _overload_pressure(self) -> float:
+        """Fleet-wide overload pressure: the max of every resident
+        engine's pressure (queue fill, oldest age, prep-dict bytes) — the
+        most-stressed tenant defines the fleet's state, because the device
+        and the prep memo are shared."""
+        return max(
+            (
+                t.engine._overload_pressure()
+                for t in self._tenants.values()
+                if t.engine is not None
+            ),
+            default=0.0,
+        )
 
     def _check_breaker(self, tenant: Tenant) -> None:
         """Open the tenant's circuit after ``breaker_threshold`` consecutive

@@ -1,0 +1,257 @@
+"""Overload protection for the serving runtime: admission, shedding, brownout.
+
+The paper's saturation curves are the motivation: on a memory-bound machine
+SpMV throughput flat-lines once latency binds — past that point extra
+concurrent work buys NO throughput, only latency.  A serving stack without
+that discipline converts a traffic spike directly into unbounded queue
+memory and unbounded p99.  PR 9 made the stack survive *faults*; this
+module makes it survive *load*.  It holds the pieces the engine and the
+fleet share:
+
+* The **typed error taxonomy** for overload (extending PR 9's
+  ``CircuitOpenError``/``NonFiniteOutput``):
+
+  - :class:`OverloadError` — admission refused the request (queue cap hit
+    under the ``reject`` policy, ``block`` timed out, a token bucket ran
+    dry, or the brownout controller is in SHED).  Raised *from submit*, so
+    overload fails in microseconds instead of queueing work nobody will
+    wait for.
+  - :class:`DeadlineExceededError` (an :class:`OverloadError`) — the
+    request was admitted but its deadline lapsed before dispatch; the
+    engine fails its future via ``set_exception`` instead of spending a
+    bucket slot computing an answer whose caller has already given up.
+  - :class:`EngineClosedError` — the engine was closed; queued and
+    in-flight futures fail with this instead of leaving callers blocked
+    in ``result()``.
+
+* :class:`TokenBucket` — per-tenant fair-share admission for the fleet.
+  The PR-9 circuit breaker protects tenants from each other's *failures*;
+  the token bucket protects them from each other's *load*: a greedy
+  tenant's burst drains its own bucket and fails fast, never the shared
+  queue budget.
+
+* :class:`BrownoutController` — a watermark state machine
+  (HEALTHY -> BROWNOUT -> SHED) over a scalar *pressure* signal in [0, 1+]
+  (the max of normalized queue depth, oldest-request age, and prepared-dict
+  byte pressure).  Hysteresis (separate enter/exit watermarks) plus a
+  minimum dwell time keep a boundary load from flapping the state;
+  de-escalation from SHED always passes through BROWNOUT, never jumps
+  straight to HEALTHY.  Components consult ``state`` to degrade
+  gracefully (widest-bucket dispatch, paused retune/repair, predicted-only
+  tenant admission, tightened residency) and listeners — the engine's and
+  fleet's supervisors — get every transition as an event.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable
+
+__all__ = [
+    "OverloadError",
+    "DeadlineExceededError",
+    "EngineClosedError",
+    "TokenBucket",
+    "BrownoutController",
+    "BrownoutTransition",
+    "HEALTHY",
+    "BROWNOUT",
+    "SHED",
+]
+
+
+class OverloadError(RuntimeError):
+    """Admission refused under load: the bounded queue is full (``reject``
+    policy or a ``block`` timeout), a tenant's token bucket ran dry, or the
+    brownout controller is shedding.  Fails fast at ``submit()`` — the
+    typed signal for callers to back off or retry elsewhere."""
+
+
+class DeadlineExceededError(OverloadError):
+    """The request was admitted but waited past its deadline before
+    dispatch; its future fails instead of occupying a bucket slot computing
+    an answer nobody is waiting for."""
+
+
+class EngineClosedError(RuntimeError):
+    """The engine is closed: new submissions are refused, and any future
+    still unresolved at ``close(drain=False)`` carries this instead of
+    blocking its caller in ``result()`` forever."""
+
+
+class TokenBucket:
+    """Thread-safe token bucket: ``rate`` tokens/s refill, ``burst`` cap.
+
+    ``try_take`` is non-blocking by design — fair-share admission must
+    fail a greedy tenant in microseconds, not stall the submit path.
+    """
+
+    def __init__(self, rate: float, burst: float):
+        if rate <= 0 or burst <= 0:
+            raise ValueError("rate and burst must be positive")
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self.tokens = float(burst)
+        self._t = time.perf_counter()
+        self._lock = threading.Lock()
+
+    def try_take(self, n: float = 1.0, now: float | None = None) -> bool:
+        """Consume ``n`` tokens if available; False (and no debt) if not."""
+        with self._lock:
+            if now is None:
+                now = time.perf_counter()
+            dt = max(0.0, now - self._t)
+            self.tokens = min(self.burst, self.tokens + dt * self.rate)
+            self._t = now
+            if self.tokens >= n:
+                self.tokens -= n
+                return True
+            return False
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (
+            f"TokenBucket(rate={self.rate:g}/s, burst={self.burst:g}, "
+            f"tokens={self.tokens:.2f})"
+        )
+
+
+HEALTHY = "healthy"
+BROWNOUT = "brownout"
+SHED = "shed"
+
+
+@dataclasses.dataclass(frozen=True)
+class BrownoutTransition:
+    """One state change of a :class:`BrownoutController`."""
+
+    t: float
+    frm: str
+    to: str
+    pressure: float
+
+
+class BrownoutController:
+    """Watermark state machine over a scalar overload-pressure signal.
+
+    Pressure is a dimensionless fraction: the caller feeds
+    ``update(max(queue_depth/max_queue, oldest_age/shed_after_s,
+    prep_bytes/prep_budget))`` (see :meth:`pressure`), and the controller
+    answers with one of three states:
+
+    ========== ==============================================================
+    state      meaning
+    ========== ==============================================================
+    HEALTHY    serve normally
+    BROWNOUT   degrade gracefully: pin dispatch to the widest k-bucket,
+               pause background retune/repair, admit tenants predicted-only,
+               tighten residency eviction
+    SHED       additionally refuse NEW work fast (``OverloadError`` at
+               submit) while queued work keeps draining
+    ========== ==============================================================
+
+    Hysteresis: the state *enters* at ``enter_brownout``/``enter_shed`` and
+    only *exits* below the strictly lower ``exit_brownout``/``exit_shed``
+    watermarks, so a load sitting exactly on a boundary cannot flap the
+    state.  ``min_dwell_s`` additionally pins every state for a minimum
+    time; SHED de-escalates to BROWNOUT (never straight to HEALTHY), so
+    recovery is observable as two transitions.  ``listeners`` receive each
+    :class:`BrownoutTransition` — the engine and fleet subscribe their
+    supervisors' event logs.
+
+    Thread-safety: ``update`` is called from one driving thread (the
+    serving loop); ``state`` reads are a single attribute load and safe
+    from any thread (background retune/repair workers poll it).
+    """
+
+    def __init__(
+        self,
+        *,
+        enter_brownout: float = 0.7,
+        exit_brownout: float = 0.35,
+        enter_shed: float = 0.95,
+        exit_shed: float = 0.7,
+        min_dwell_s: float = 0.05,
+    ):
+        if not (exit_brownout < enter_brownout and exit_shed < enter_shed):
+            raise ValueError(
+                "exit watermarks must sit strictly below their enter "
+                "watermarks (that gap IS the hysteresis)"
+            )
+        if enter_brownout > enter_shed:
+            raise ValueError("enter_brownout must not exceed enter_shed")
+        self.enter_brownout = float(enter_brownout)
+        self.exit_brownout = float(exit_brownout)
+        self.enter_shed = float(enter_shed)
+        self.exit_shed = float(exit_shed)
+        self.min_dwell_s = float(min_dwell_s)
+        self.state = HEALTHY
+        self.pressure_last = 0.0
+        self.transitions: list[BrownoutTransition] = []
+        self.listeners: list[Callable[[BrownoutTransition], None]] = []
+        self._t_entered = time.perf_counter()
+
+    @staticmethod
+    def pressure(**signals: float | None) -> float:
+        """Fold named normalized signals into one scalar: the max of all
+        non-None values, floored at 0 (callers pass e.g. ``queue=0.4,
+        age=None, prep=0.1`` without filtering)."""
+        vals = [float(v) for v in signals.values() if v is not None]
+        return max(vals) if vals else 0.0
+
+    def add_listener(self, fn: Callable[[BrownoutTransition], None]) -> None:
+        self.listeners.append(fn)
+
+    def entries(self, state: str) -> int:
+        """How many transitions entered ``state``."""
+        return sum(1 for tr in self.transitions if tr.to == state)
+
+    def update(self, pressure: float, now: float | None = None) -> str:
+        """Advance the state machine one observation; returns the state."""
+        if now is None:
+            now = time.perf_counter()
+        self.pressure_last = float(pressure)
+        # min_dwell_s == 0 disables dwell gating entirely (a synthetic
+        # ``now`` clock may predate the construction-time anchor).
+        if self.min_dwell_s > 0.0 and now - self._t_entered < self.min_dwell_s:
+            return self.state
+        nxt = self.state
+        if self.state == HEALTHY:
+            if pressure >= self.enter_shed:
+                nxt = SHED
+            elif pressure >= self.enter_brownout:
+                nxt = BROWNOUT
+        elif self.state == BROWNOUT:
+            if pressure >= self.enter_shed:
+                nxt = SHED
+            elif pressure <= self.exit_brownout:
+                nxt = HEALTHY
+        else:  # SHED: step down one level at a time — recovery is gradual
+            if pressure <= self.exit_shed:
+                nxt = BROWNOUT
+        if nxt is not self.state:
+            tr = BrownoutTransition(
+                t=now, frm=self.state, to=nxt, pressure=float(pressure)
+            )
+            self.state = nxt
+            self._t_entered = now
+            self.transitions.append(tr)
+            for fn in self.listeners:
+                fn(tr)
+        return self.state
+
+    def summary(self) -> dict[str, Any]:
+        return {
+            "state": self.state,
+            "pressure": round(self.pressure_last, 4),
+            "transitions": len(self.transitions),
+            "brownout_entries": self.entries(BROWNOUT),
+            "shed_entries": self.entries(SHED),
+        }
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (
+            f"BrownoutController(state={self.state}, "
+            f"pressure={self.pressure_last:.2f}, "
+            f"transitions={len(self.transitions)})"
+        )

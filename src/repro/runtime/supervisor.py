@@ -27,6 +27,15 @@ Re-promotion is the engine's job (``SparseEngine._repair_worker``): a
 background thread probes the saved tuned executable and stages it back via
 the PR-7 ``hot_swap`` machinery once a probe batch succeeds, so a
 transient fault costs degraded throughput, never a permanent downgrade.
+
+The event log is shared infrastructure: besides the fault-path kinds
+(``batch_failed``/``demote``/``promote``/``batch_abandoned``/
+``quarantine``), the PR-10 overload layer records ``brownout`` (every
+HEALTHY/BROWNOUT/SHED transition of a :class:`runtime.overload.
+BrownoutController`, with the pressure that caused it) and
+``engine_aborted`` (futures failed by ``close(drain=False)``), so one
+``events_of`` query reconstructs an incident timeline across fault AND
+load protection.
 """
 from __future__ import annotations
 

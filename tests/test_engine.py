@@ -408,3 +408,26 @@ def test_submit_sparse_strict_dtype_raises_instead_of_casting():
         eng.submit_sparse(
             np.array([1, 2], np.int64), np.ones(2, np.float64)
         )
+
+
+def test_result_on_aborted_engine_raises_immediately():
+    # PR 10 regression guard: close(drain=False) must fail every pending
+    # future with the typed EngineClosedError, so a caller already parked
+    # in result(timeout=...) returns in milliseconds -- not after the
+    # full timeout, and never by hanging.
+    import time
+
+    from repro.runtime.overload import EngineClosedError
+
+    _, a = small(seed=76)
+    eng = engine(a, ks=(1, 4), max_wait_s=10.0)  # batch never fills: queued
+    rng = np.random.default_rng(76)
+    x = jnp.asarray(rng.standard_normal(a.shape[1]).astype(np.float32))
+    req = eng.submit(x)
+    eng.close(drain=False)
+    t0 = time.perf_counter()
+    with pytest.raises(EngineClosedError):
+        req.result(timeout=30.0)
+    assert time.perf_counter() - t0 < 1.0  # immediate, not timeout-bound
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.submit(x)
